@@ -1,0 +1,43 @@
+"""Shared benchmark utilities: timing + tiny-model training harness."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def time_call(fn: Callable, *args, warmup: int = 2, iters: int = 10) -> float:
+    """Median wall time in microseconds (fn must be jit'd/blocking-safe)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times) * 1e6)
+
+
+def csv_row(name: str, us: float, derived: str) -> str:
+    return f"{name},{us:.1f},{derived}"
+
+
+# ---------------------------------------------------------------------------
+# Weight-only INT8 simulation (the "INT8 model" baseline of Tables I/II:
+# matmuls run in int8 while non-linearities stay fp32 — we quantize the
+# 2D+ weights with per-tensor symmetric int8 fake-quant).
+# ---------------------------------------------------------------------------
+
+
+def int8_weights(params):
+    from repro.core.sole.quant import fake_quant_int8
+
+    def q(p):
+        if p.ndim >= 2 and p.dtype == jnp.float32:
+            return fake_quant_int8(p)
+        return p
+
+    return jax.tree.map(q, params)

@@ -1,0 +1,76 @@
+"""Paper Fig. 6 proxy: Softmax/LayerNorm op speedup at the paper's shapes
+(DeiT-Tiny, token length 785, batch 1..16).
+
+Two views (we have no GPU/ASIC in this container):
+  1. measured CPU wall time of the jit'd fp32 op vs the SOLE integer-
+     semantics op (same XLA backend — shows SOLE's arithmetic is not
+     more expensive even emulated in fp);
+  2. the *memory-traffic model* speedup on the paper's own terms: the
+     two-stage unit's intermediate buffer shrinks fp32/fp16 -> 4-bit
+     (softmax) and fp32 -> 8-bit (layernorm), which bounds the
+     memory-bound op time ratio — this is the mechanism behind the
+     paper's 36.2x / 61.3x GPU speedups (plus datapath specialization).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row, time_call
+from repro.core.nonlin import layernorm_fn, softmax_fn
+
+TOKENS = 785      # 448x448 DeiT-Tiny
+HEADS = 3
+D_MODEL = 192
+
+
+def run(quick: bool = False):
+    rows = []
+    batches = [1, 4, 16] if quick else [1, 2, 4, 8, 16]
+    exact_sm = jax.jit(lambda x: softmax_fn("exact")(x))
+    sole_sm = jax.jit(lambda x: softmax_fn("sole")(x))
+    exact_ln = jax.jit(lambda x, g, b: layernorm_fn("exact")(x, g, b))
+    sole_ln = jax.jit(lambda x, g, b: layernorm_fn("sole")(x, g, b))
+    rng = np.random.default_rng(0)
+    g = jnp.ones(D_MODEL)
+    bta = jnp.zeros(D_MODEL)
+    for b in batches:
+        x = jnp.asarray(rng.normal(0, 3, (b, HEADS, TOKENS, TOKENS))
+                        .astype(np.float32))
+        t_e = time_call(exact_sm, x)
+        t_s = time_call(sole_sm, x)
+        rows.append(csv_row(f"fig6_softmax/b{b}", t_s,
+                            f"fp32_us={t_e:.1f};ratio={t_e / t_s:.2f}"))
+        h = jnp.asarray(rng.normal(0, 2, (b, TOKENS, D_MODEL))
+                        .astype(np.float32))
+        t_e = time_call(exact_ln, h, g, bta)
+        t_s = time_call(sole_ln, h, g, bta)
+        rows.append(csv_row(f"fig6_layernorm/b{b}", t_s,
+                            f"fp32_us={t_e:.1f};ratio={t_e / t_s:.2f}"))
+
+    # memory-traffic bound (the paper's mechanism):
+    #   softmax: read 8b logits, buffer 4b codes (vs 16b softermax / 32b
+    #   fp32), write 8b probs; two-stage => buffer is read+written.
+    def sm_bytes(in_b, buf_b, out_b):
+        return in_b + 2 * buf_b + out_b
+
+    fp32 = sm_bytes(32, 32, 32)
+    sole = sm_bytes(8, 4, 8)
+    softermax = sm_bytes(8, 16, 8)
+    rows.append(csv_row("fig6_softmax/traffic_model", 0.0,
+                        f"vs_fp32={fp32 / sole:.2f}x;"
+                        f"vs_softermax={softermax / sole:.2f}x"))
+    ln_fp32 = 32 * 2 + 32     # read for stats, read for affine, write
+    ln_sole = 8 * 2 + 8
+    ln_ibert = 32 * 2 + 32
+    rows.append(csv_row("fig6_layernorm/traffic_model", 0.0,
+                        f"vs_fp32={ln_fp32 / ln_sole:.2f}x;"
+                        f"vs_ibert={ln_ibert / ln_sole:.2f}x"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

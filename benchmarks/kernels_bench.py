@@ -1,0 +1,52 @@
+"""Pallas kernel verification bench: kernel-vs-oracle agreement across a
+shape sweep (interpret mode — correctness + code-path exercise, not TPU
+timing) and the VMEM working-set accounting per BlockSpec."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.core.sole.quant import calibrate_ptf
+from repro.kernels import ref as K
+from repro.kernels.ops import ailayernorm_op, e2softmax_op, flash_attention_op
+
+
+def run(quick: bool = False):
+    rows = []
+    rng = np.random.default_rng(0)
+    shapes = [(8, 785)] if quick else [(8, 785), (4, 3072), (2, 8192)]
+    for shp in shapes:
+        x = jnp.asarray(rng.normal(0, 3, shp).astype(np.float32))
+        err = float(jnp.max(jnp.abs(e2softmax_op(x) - K.e2softmax_ref(x))))
+        vmem_kb = 256 * shp[-1] * 4 / 1024
+        rows.append(csv_row(f"kernel_e2softmax/{shp[0]}x{shp[1]}", 0.0,
+                            f"max_err={err:.2e};vmem_block_kb={vmem_kb:.0f}"))
+    for c in ([768] if quick else [768, 2048, 6144]):
+        h = jnp.asarray(rng.normal(0, 2, (16, c)).astype(np.float32))
+        g = jnp.ones(c); b = jnp.zeros(c)
+        p = calibrate_ptf(h, unsigned=True)
+        xi = p.quantize(h) - p.zero_point
+        err = float(jnp.max(jnp.abs(
+            ailayernorm_op(h, g, b, params=p) - K.ailayernorm_ref(xi, p.alpha, g, b))))
+        rows.append(csv_row(f"kernel_ailayernorm/c{c}", 0.0,
+                            f"max_err={err:.2e}"))
+    B, S, H, hd = 1, 256, 2, 64
+    q, k, v = (jnp.asarray(rng.normal(0, 1, (B, S, H, hd)).astype(np.float32))
+               for _ in range(3))
+    out = flash_attention_op(q, k, v, causal=True, sole=True, block=64)
+    qf = jnp.moveaxis(q, 2, 1).reshape(B * H, S, hd)
+    kf = jnp.moveaxis(k, 2, 1).reshape(B * H, S, hd)
+    vf = jnp.moveaxis(v, 2, 1).reshape(B * H, S, hd)
+    ref = jnp.moveaxis(
+        K.flash_e2softmax_ref(qf, kf, vf, causal=True, sole=True)
+        .reshape(B, H, S, hd), 1, 2)
+    rows.append(csv_row(
+        "kernel_flash_e2softmax/s256_b64", 0.0,
+        f"mean_err={float(jnp.mean(jnp.abs(out - ref))):.4f};"
+        f"blocks_skipped=causal_half"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

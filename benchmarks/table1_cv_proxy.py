@@ -1,0 +1,168 @@
+"""Paper Table I proxy (CV): a DeiT-style mini-ViT trained FP32 on a
+synthetic 10-class image task, evaluated FP32 / FP32+SOLE / INT8 /
+INT8+SOLE without retraining. Also reproduces Fig. 3: the distribution of
+exp(x - max) over attention rows in the trained model, in the log2 domain
+(what makes 4-bit log2 quantization adequate).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row, int8_weights
+from repro.configs.base import ArchConfig
+from repro.core.sole.e2softmax import log2exp
+from repro.models import layers as L
+
+N_CLASSES = 10
+IMG = 16           # 16x16 "images"
+PATCH = 4
+D = 64
+
+
+def _vit_cfg(**kw) -> ArchConfig:
+    base = dict(name="mini_vit", family="dense", n_layers=3, d_model=D,
+                n_heads=4, n_kv_heads=4, head_dim=16, d_ff=128,
+                vocab_size=32, mlp_kind="gelu", norm_kind="layernorm",
+                pos_kind="none", causal=False, dtype="float32",
+                train_softmax_mode="exact", train_norm_mode="exact")
+    base.update(kw)
+    return ArchConfig(**base)
+
+
+def make_data(rng, n, noise=1.1):
+    """Class = which of 10 sinusoid templates dominates the image."""
+    xs = np.linspace(0, 2 * np.pi, IMG)
+    xx, yy = np.meshgrid(xs, xs)
+    templates = np.stack([np.sin((k % 5 + 1) * xx + (k // 5) * yy)
+                          for k in range(N_CLASSES)])
+    labels = rng.integers(0, N_CLASSES, n)
+    imgs = templates[labels] + rng.normal(0, noise, (n, IMG, IMG))
+    # patchify: (n, 16 tokens, 16 dims)
+    p = imgs.reshape(n, IMG // PATCH, PATCH, IMG // PATCH, PATCH)
+    p = p.transpose(0, 1, 3, 2, 4).reshape(n, (IMG // PATCH) ** 2, PATCH * PATCH)
+    return p.astype(np.float32), labels.astype(np.int32)
+
+
+def init_vit(key, cfg):
+    ks = jax.random.split(key, 6)
+    layers = jax.vmap(lambda k: {
+        "ln1": L.init_norm(cfg), "attn": L.init_attention(k, cfg),
+        "ln2": L.init_norm(cfg),
+        "mlp": L.init_mlp(jax.random.fold_in(k, 1), cfg),
+    })(jax.random.split(ks[0], cfg.n_layers))
+    params = {
+        "patch": L.make_param(ks[1], (PATCH * PATCH, cfg.d_model), (None, None)),
+        "pos": L.make_param(ks[2], ((IMG // PATCH) ** 2 + 1, cfg.d_model),
+                            (None, None)),
+        "cls": L.make_param(ks[3], (cfg.d_model,), (None,)),
+        "layers": L.stack_layer_params(layers),
+        "final_norm": L.init_norm(cfg),
+        "head": L.make_param(ks[4], (cfg.d_model, N_CLASSES), (None, None)),
+    }
+    return L.split_params(params)[0]
+
+
+def vit_forward(params, patches, cfg, phase):
+    b = patches.shape[0]
+    x = patches @ params["patch"]
+    cls = jnp.broadcast_to(params["cls"], (b, 1, cfg.d_model))
+    x = jnp.concatenate([cls, x], axis=1) + params["pos"][None]
+    positions = jnp.arange(x.shape[1])
+
+    def body(x, lp):
+        h = L.apply_norm(x, lp["ln1"], cfg, phase)
+        x = x + L.apply_attention(lp["attn"], h, positions, cfg, phase,
+                                  causal=False)
+        h = L.apply_norm(x, lp["ln2"], cfg, phase)
+        x = x + L.apply_mlp(h, lp["mlp"], cfg)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    x = L.apply_norm(x, params["final_norm"], cfg, phase)
+    return x[:, 0] @ params["head"]
+
+
+def _attention_exp_distribution(params, patches, cfg):
+    """Fig. 3: histogram of Log2Exp codes over attention rows."""
+    # capture logits of layer 0 by re-running projections
+    lp = jax.tree.map(lambda a: a[0], params["layers"])
+    x = patches @ params["patch"]
+    cls = jnp.broadcast_to(params["cls"], (x.shape[0], 1, cfg.d_model))
+    x = jnp.concatenate([cls, x], 1) + params["pos"][None]
+    h = L.apply_norm(x, lp["ln1"], cfg, "serve")
+    q, k, _ = L._project_qkv(lp["attn"], h, cfg)
+    logits = jnp.einsum("bshd,bthd->bhst", q * (cfg.head_dim ** -0.5), k)
+    m = jnp.max(logits, -1, keepdims=True)
+    codes = log2exp(logits - m, exp_bits=8)  # wide codes to see the tail
+    return np.asarray(codes).ravel()
+
+
+def run(quick: bool = False):
+    rng = np.random.default_rng(0)
+    cfg = _vit_cfg()
+    params = init_vit(jax.random.PRNGKey(0), cfg)
+    steps = 60 if quick else 250
+    from repro.train.optimizer import OptConfig, adamw_update, init_opt_state
+    opt = init_opt_state(params)
+    ocfg = OptConfig(lr=2e-3, warmup_steps=10, total_steps=steps,
+                     weight_decay=0.01)
+
+    @jax.jit
+    def step(p, o, imgs, labels):
+        def loss_fn(p):
+            logits = vit_forward(p, imgs, cfg, "train")
+            logp = jax.nn.log_softmax(logits)
+            return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], 1))
+        loss, g = jax.value_and_grad(loss_fn)(p)
+        p, o, _ = adamw_update(p, g, o, ocfg)
+        return p, o, loss
+
+    for i in range(steps):
+        imgs, labels = make_data(rng, 64)
+        params, opt, loss = step(params, opt, jnp.asarray(imgs),
+                                 jnp.asarray(labels))
+
+    test_imgs, test_labels = make_data(np.random.default_rng(999), 512)
+    test_imgs = jnp.asarray(test_imgs)
+
+    def acc(p, cfg_eval):
+        logits = vit_forward(p, test_imgs, cfg_eval, "serve")
+        return float(jnp.mean(jnp.argmax(logits, -1) == test_labels))
+
+    sole = dataclasses.replace(cfg, softmax_mode="sole", norm_mode="sole")
+    exact = dataclasses.replace(cfg, softmax_mode="exact", norm_mode="exact",
+                                logit_int8=False)
+    p8 = int8_weights(params)
+    results = {
+        "fp32": acc(params, exact),
+        "fp32+sole": acc(params, sole),
+        "int8": acc(p8, exact),
+        "int8+sole": acc(p8, sole),
+        "fp32+softermax": acc(params, dataclasses.replace(
+            cfg, softmax_mode="softermax", norm_mode="exact")),
+        "fp32+ibert": acc(params, dataclasses.replace(
+            cfg, softmax_mode="ibert", norm_mode="ibert")),
+    }
+    rows = [csv_row(f"table1_cv/{k}", 0.0, f"acc={v:.4f}")
+            for k, v in results.items()]
+    rows.append(csv_row(
+        "table1_cv/acc_drop_fp32_sole", 0.0,
+        f"drop={results['fp32'] - results['fp32+sole']:.4f};paper<0.009"))
+    rows.append(csv_row(
+        "table1_cv/acc_drop_int8_sole", 0.0,
+        f"drop={results['int8'] - results['int8+sole']:.4f};paper<0.008"))
+
+    # Fig. 3: fraction of attention-exponent mass representable in 4 bits
+    codes = _attention_exp_distribution(params, test_imgs[:64], cfg)
+    frac4 = float(np.mean(codes <= 15))
+    rows.append(csv_row("fig3/log2exp_codes_within_4bit", 0.0,
+                        f"frac={frac4:.4f};mean_code={codes.mean():.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

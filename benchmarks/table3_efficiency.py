@@ -1,0 +1,111 @@
+"""Paper Table III proxy: analytical energy/area model of the Softmax and
+LayerNorm units — SOLE vs Softermax [20] vs NN-LUT/I-BERT [26, 21].
+
+We cannot synthesize RTL in this container, so we count the per-element
+datapath operations each design performs and weight them with standard
+per-op energy/area figures (Horowitz ISSCC'14-derived 45nm numbers,
+uniformly applied to all designs — only *ratios* are meaningful):
+
+  energy (pJ): add8 .03, add16 .05, add32 .1, mult8 .2, mult16 .9,
+               mult32 3.1, shift .01 per 8 bits, LUT-read ~ SRAM:
+               .6 (64-entry), .15 (16-entry), cmp as add.
+  SRAM buffer access: .08 pJ/bit (small SRAM), counted per stage
+  crossing (two-stage dataflow reads+writes the intermediate buffer).
+  area (um^2): adder 7/bit, multiplier ~ .6*b^2, shifter 3/bit,
+  LUT 18/entry-byte, buffer SRAM .45/bit.
+
+The per-element op inventories follow each paper's datapath description.
+"""
+from __future__ import annotations
+
+from benchmarks.common import csv_row
+
+E = {"add8": .03, "add16": .05, "add32": .1, "mult8": .2, "mult16": .9,
+     "mult32": 3.1, "shift8": .01, "shift16": .02, "shift32": .04,
+     "lut16": .15, "lut64": .6, "cmp8": .03, "cmp16": .05,
+     "sram_bit": .08}
+A = {"add": 7, "mult": 0.6, "shift": 3, "lut_byte": 18, "sram_bit": 0.45}
+
+
+def softmax_designs(buffer_len=785):
+    """Per-element ops + per-element buffer bits for the softmax unit."""
+    designs = {
+        # E2Softmax: max cmp, Log2Exp = 2 shifts + 2 adds (8b), reduction
+        # shift-add, ALDivision = LOD+sub+mux+2 shifts; 4-bit buffer.
+        "sole": dict(ops={"cmp8": 1, "shift8": 4, "add8": 3, "lut16": 0,
+                          "add16": 1}, buf_bits=4,
+                     area=dict(add=3 * 8, shift=4 * 8, mult=0, lut_byte=0)),
+        # Softermax: max cmp, base-2 exponent via low-prec mult+add
+        # (fixed-point), running-sum add16, reciprocal mult16; 16-bit buf.
+        "softermax": dict(ops={"cmp8": 1, "mult8": 1, "add16": 2,
+                               "mult16": 1}, buf_bits=16,
+                          area=dict(add=2 * 16, shift=0,
+                                    mult=8 * 8 + 16 * 16, lut_byte=0)),
+        # I-BERT/NN-LUT-style: int32 poly i-exp (2 mult32 + 2 add32) or
+        # 64-entry LUT + interpolation mult; int32 division; 32-bit buf.
+        "ibert": dict(ops={"cmp8": 1, "mult32": 2, "add32": 3}, buf_bits=32,
+                      area=dict(add=3 * 32, shift=0, mult=2 * 32 * 32,
+                                lut_byte=0)),
+    }
+    return designs
+
+
+def layernorm_designs():
+    designs = {
+        # AILayerNorm: sub zp (add8), dyn-compress (cmp+shift), 16-entry
+        # LUT square, PTF shifts, add12 accum; stage2: 2 mult8 + 2 add8.
+        "sole": dict(ops={"add8": 2, "cmp8": 1, "shift8": 3, "lut16": 1,
+                          "add16": 2, "mult8": 2}, buf_bits=8,
+                     area=dict(add=4 * 12, shift=3 * 8, mult=2 * 64,
+                               lut_byte=16)),
+        # NN-LUT: per-element LUT64 + mult16 interpolation for rsqrt path,
+        # int32 squares for variance; 32-bit buffering.
+        "nnlut": dict(ops={"mult32": 1, "add32": 2, "lut64": 1, "mult16": 1},
+                      buf_bits=32,
+                      area=dict(add=2 * 32, shift=0,
+                                mult=32 * 32 + 16 * 16, lut_byte=64 * 2)),
+        # I-BERT: int32 mult for x^2, int32 accum, Newton iters amortized.
+        "ibert": dict(ops={"mult32": 1, "add32": 2}, buf_bits=32,
+                      area=dict(add=2 * 32, shift=0, mult=32 * 32,
+                                lut_byte=0)),
+    }
+    return designs
+
+
+def _energy(d):
+    e = sum(E[k] * n for k, n in d["ops"].items())
+    e += 2 * d["buf_bits"] * E["sram_bit"]      # stage1 write + stage2 read
+    return e
+
+
+def _area(d):
+    a = d["area"]
+    area = (a.get("add", 0) * A["add"] + a.get("shift", 0) * A["shift"]
+            + a.get("mult", 0) * A["mult"] + a.get("lut_byte", 0) * A["lut_byte"])
+    area += d["buf_bits"] * A["sram_bit"] * 785   # vector-length buffer
+    return area
+
+
+def run(quick: bool = False):
+    rows = []
+    sm = {k: (_energy(v), _area(v)) for k, v in softmax_designs().items()}
+    ln = {k: (_energy(v), _area(v)) for k, v in layernorm_designs().items()}
+    for k, (e, a) in sm.items():
+        rows.append(csv_row(f"table3_softmax/{k}", 0.0,
+                            f"energy_pj={e:.3f};area_au={a:.0f}"))
+    for k, (e, a) in ln.items():
+        rows.append(csv_row(f"table3_layernorm/{k}", 0.0,
+                            f"energy_pj={e:.3f};area_au={a:.0f}"))
+    rows.append(csv_row(
+        "table3_softmax/sole_vs_softermax", 0.0,
+        f"energy={sm['softermax'][0] / sm['sole'][0]:.2f}x(paper 3.04x);"
+        f"area={sm['softermax'][1] / sm['sole'][1]:.2f}x(paper 2.82x)"))
+    rows.append(csv_row(
+        "table3_layernorm/sole_vs_nnlut", 0.0,
+        f"energy={ln['nnlut'][0] / ln['sole'][0]:.2f}x(paper 3.86x);"
+        f"area={ln['nnlut'][1] / ln['sole'][1]:.2f}x(paper 3.32x)"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,63 @@
+"""The paper's headline claim, end to end: train in FP32, swap SOLE in at
+inference with NO retraining, and keep accuracy.
+
+Trains a small LM on the induction (copy) task until it solves it, then
+evaluates greedy decoding with exact softmax/LayerNorm vs SOLE.
+
+Run:  PYTHONPATH=src python examples/train_then_serve_sole.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ShapeConfig, get_config
+from repro.data.pipeline import SyntheticLM
+from repro.models import api
+from repro.train.optimizer import OptConfig, adamw_update, init_opt_state
+
+
+def main():
+    cfg = dataclasses.replace(
+        get_config("qwen2_0_5b").smoke(), n_layers=2, d_model=128,
+        n_heads=4, head_dim=32, d_ff=256, vocab_size=256)
+    train_cfg = dataclasses.replace(cfg, softmax_mode="exact",
+                                    norm_mode="exact", logit_int8=False)
+    shape = ShapeConfig("demo", seq_len=64, global_batch=16, kind="train")
+    pipe = SyntheticLM(cfg, shape.seq_len, shape.global_batch, 0, task="copy")
+
+    params, _ = api.init_params(jax.random.PRNGKey(0), cfg)
+    opt = init_opt_state(params)
+    ocfg = OptConfig(lr=5e-3, warmup_steps=10, total_steps=150)
+
+    @jax.jit
+    def step(p, o, b):
+        (loss, _), g = jax.value_and_grad(api.loss_fn, has_aux=True)(
+            p, b, train_cfg)
+        p, o, _ = adamw_update(p, g, o, ocfg)
+        return p, o, loss
+
+    for i in range(150):
+        batch = {k: jnp.asarray(v) for k, v in pipe.batch_at(i).items()}
+        params, opt, loss = step(params, opt, batch)
+        if i % 50 == 0:
+            print(f"step {i:4d} loss {float(loss):.3f}")
+
+    test = {k: jnp.asarray(v) for k, v in pipe.batch_at(10_000).items()}
+    half = shape.seq_len // 2
+
+    def acc(eval_cfg):
+        logits = api.forward(params, test, eval_cfg, "serve")
+        pred = jnp.argmax(logits, -1)
+        return float(jnp.mean((pred == test["targets"])[:, half:]))
+
+    a_exact = acc(train_cfg)
+    a_sole = acc(cfg)  # E2Softmax + AILayerNorm, no retraining
+    print(f"\ncopy-task accuracy  exact: {a_exact:.4f}   SOLE: {a_sole:.4f}")
+    print(f"accuracy drop with SOLE, zero retraining: "
+          f"{a_exact - a_sole:+.4f}  (paper claims < 0.009)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""RWKV-6 (Finch) 7B — attention-free, data-dependent decay [arXiv:2404.05892].
+
+E2Softmax is inapplicable (no softmax in token mixing — see DESIGN.md
+§Arch-applicability); AILayerNorm applies to the LayerNorms and the
+per-head GroupNorm. O(1) state => long_500k decode runs.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="rwkv6_7b", family="ssm",
+    n_layers=32, d_model=4096, n_heads=64, n_kv_heads=64, head_dim=64,
+    d_ff=14336, vocab_size=65536, rwkv_head_size=64,
+    mlp_kind="rwkv_cmix", norm_kind="layernorm", pos_kind="none",
+)

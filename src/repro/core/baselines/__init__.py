@@ -1,0 +1,2 @@
+from repro.core.baselines.ibert import i_exp, i_layernorm, i_softmax, i_sqrt  # noqa: F401
+from repro.core.baselines.softermax import softermax  # noqa: F401

@@ -1,0 +1,103 @@
+"""I-BERT baseline (Kim et al., ICML'21) — integer-only softmax/LayerNorm.
+
+Reproduces the INT32 polynomial-approximation kernels that SOLE compares
+against: i-exp (2nd-order polynomial on [-ln2, 0] + shift), i-softmax and
+i-layernorm (Newton integer sqrt). All arithmetic is int32 with floor
+division, matching the published algorithm; note the 32-bit intermediates
+— the storage cost SOLE's 4/8-bit pipeline eliminates.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+# exp(p) ~= a (p + b)^2 + c on p in [-ln2, 0]   (I-BERT Eq. for i-exp)
+_A, _B, _C = 0.3585, 1.353, 0.344
+_LN2 = 0.6931471805599453
+
+
+def i_poly_exp(q: Array, scale: float) -> Tuple[Array, float]:
+    """Integer polynomial for exp on q*scale in [-ln2, 0]."""
+    qb = jnp.int32(math.floor(_B / scale))
+    qc = jnp.int32(math.floor(_C / (_A * scale * scale)))
+    out = (q + qb) * (q + qb) + qc
+    return out.astype(jnp.int32), _A * scale * scale
+
+
+def i_exp(q: Array, scale: float) -> Tuple[Array, float]:
+    """i-exp: exp(q*scale) for q <= 0 via range reduction by ln2."""
+    q_ln2 = max(int(math.floor(_LN2 / scale)), 1)
+    z = jnp.minimum((-q) // q_ln2, 30)
+    p = q + z * q_ln2                      # in (-q_ln2, 0]
+    q_out, out_scale = i_poly_exp(p, scale)
+    q_out = q_out >> z
+    return q_out, out_scale
+
+
+def i_softmax(
+    x: Array,
+    *,
+    axis: int = -1,
+    scale: float = 1.0 / 64.0,
+    out_bits: int = 8,
+    mask: Optional[Array] = None,
+) -> Array:
+    """Integer-only softmax: int8-quantized logits -> int-exp -> int divide."""
+    x = x.astype(jnp.float32)
+    neg = jnp.asarray(jnp.finfo(jnp.float32).min, jnp.float32)
+    xm = x if mask is None else jnp.where(mask, x, neg)
+    q = jnp.clip(jnp.round(xm / scale), -(2.0**20), 2.0**20)
+    m = jnp.max(q, axis=axis, keepdims=True)
+    m = jnp.maximum(m, -(2.0**20))
+    qd = (q - m).astype(jnp.int32)
+    q_exp, _ = i_exp(qd, scale)
+    if mask is not None:
+        q_exp = jnp.where(mask, q_exp, 0)
+    s = jnp.sum(q_exp, axis=axis, keepdims=True, dtype=jnp.int32)
+    s = jnp.maximum(s, 1)
+    # I-BERT: factor = floor(2^31 / sum); out = exp * factor >> (31 - b).
+    factor = (2**31 - 1) // s
+    out_q = jnp.floor(q_exp.astype(jnp.float32) * factor.astype(jnp.float32)
+                      / float(2 ** (31 - out_bits)))
+    return out_q / float(2**out_bits)
+
+
+def i_sqrt(n: Array, iters: int = 10) -> Array:
+    """Integer Newton iteration for floor(sqrt(n)), n int32 >= 0."""
+    x0 = jnp.maximum(jnp.int32(1) << ((_bit_length(n) + 1) // 2), 1)
+
+    def body(_, x):
+        return jnp.maximum((x + n // jnp.maximum(x, 1)) // 2, 1)
+
+    return jax.lax.fori_loop(0, iters, body, x0)
+
+
+def _bit_length(n: Array) -> Array:
+    n = jnp.maximum(n.astype(jnp.int32), 1)
+    return (31 - jax.lax.clz(n)).astype(jnp.int32) + 1
+
+
+def i_layernorm(
+    x: Array,
+    gamma: Array,
+    beta: Array,
+    *,
+    scale: float = 1.0 / 16.0,
+) -> Array:
+    """Integer-only LayerNorm: int32 statistics + integer Newton sqrt."""
+    c = x.shape[-1]
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale),
+                 -(2.0**15), 2.0**15).astype(jnp.int32)
+    mu = jnp.sum(q, axis=-1, keepdims=True) // c
+    d = q - mu
+    var = jnp.sum(d * d, axis=-1, keepdims=True) // c   # int32 (I-BERT uses 32b)
+    std = i_sqrt(var)
+    # normalized value: d / std, computed with a 2^f fixed-point int divide.
+    f = 10
+    norm = (d * (2**f)) // jnp.maximum(std, 1)
+    return gamma * norm.astype(jnp.float32) / float(2**f) + beta

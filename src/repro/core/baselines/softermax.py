@@ -1,0 +1,48 @@
+"""Softermax baseline (Stevens et al., DAC'21) — functional reproduction.
+
+Softermax replaces e^x with 2^x (folding ln2 into the preceding scale),
+uses online (running max/sum) normalization and low-precision fixed-point
+arithmetic. Crucially for SOLE's comparison: its *unnormalized* stage-1
+outputs are buffered at 16-bit fixed point (vs 4-bit log2 codes in
+E2Softmax), which is what drives the memory-efficiency gap (paper §V-D).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def _round_fixed(x: Array, frac_bits: int) -> Array:
+    s = float(2 ** frac_bits)
+    return jnp.round(x * s) / s
+
+
+def softermax(
+    x: Array,
+    *,
+    axis: int = -1,
+    frac_bits: int = 15,
+    input_frac_bits: int = 4,
+    mask: Optional[Array] = None,
+) -> Array:
+    """Base-2 softmax with 16-bit fixed-point unnormalized probabilities.
+
+    ``input_frac_bits`` models the low-precision input quantization of the
+    Softermax pipeline; 2^(x - m) is stored with ``frac_bits`` fractional
+    bits (16-bit datapath).
+    """
+    x = x.astype(jnp.float32) * jnp.float32(1.4426950408889634)  # ln2 fold
+    x = _round_fixed(x, input_frac_bits)
+    neg = jnp.asarray(jnp.finfo(jnp.float32).min, jnp.float32)
+    xm = x if mask is None else jnp.where(mask, x, neg)
+    m = jnp.max(xm, axis=axis, keepdims=True)
+    m = jnp.maximum(m, neg / 2)
+    p = _round_fixed(jnp.exp2(xm - m), frac_bits)
+    if mask is not None:
+        p = jnp.where(mask, p, 0.0)
+    s = jnp.maximum(jnp.sum(p, axis=axis, keepdims=True), 2.0 ** -frac_bits)
+    return p / s

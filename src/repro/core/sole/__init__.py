@@ -1,0 +1,26 @@
+from repro.core.sole.ailayernorm import (  # noqa: F401
+    ailayernorm,
+    ailayernorm_int,
+    airmsnorm,
+    airmsnorm_int,
+    compressed_square,
+    dynamic_compress,
+    rsqrt_lut,
+)
+from repro.core.sole.e2softmax import (  # noqa: F401
+    aldivision,
+    e2softmax,
+    e2softmax_online,
+    log2exp,
+    pack_e2,
+    unpack_e2,
+)
+from repro.core.sole.quant import (  # noqa: F401
+    AffineQuantParams,
+    PTFQuantParams,
+    calibrate_affine,
+    calibrate_ptf,
+    fake_quant_int8,
+    log2_dequantize,
+    log2_quantize,
+)

@@ -1,0 +1,172 @@
+"""E2Softmax — Efficient log2-quantized Softmax (SOLE, paper §III-B).
+
+Pipeline (all integer/shift semantics, modeled bit-exactly in jnp):
+
+  1. ``Log2Exp(x) = -round(x * 1.4375)`` for x <= 0 — the hardware computes
+     ``-(x + x>>1 - x>>4)``; 1.4375 = 1 + 1/2 - 1/16 approximates 1/ln2.
+     The result is clipped to ``exp_bits`` (4 by default) — this is the
+     log2 quantization of the exponent output: exp(x) ~= 2^{-k}.
+  2. The reduced sum S = sum_i 2^{-k_i} is accumulated in a 24-bit-mantissa
+     accumulator (float32 — every addend is a power of two, and only the
+     leading-one position and the next bit of S are consumed downstream).
+  3. ``ALDivision(k_y, S) = 2^{-(k_y + k_s + 1)} * (1.636 - q(s))`` where
+     ``S = 2^{k_s} (1 + s)`` and ``q(s) = floor(2 s)/2 in {0, 0.5}`` — the
+     unbiased Mitchell log-division (paper Eq. 13). Final factors are
+     {0.818, 0.568} (paper Eq. 17).
+
+Two equivalent dataflows are provided:
+
+  * :func:`e2softmax` — two-pass (global max known, as in the paper's
+    Stage 1/Stage 2 unit with a GlobalMax buffer).
+  * :func:`e2softmax_online` — streaming/blocked with the online
+    normalization correction (paper Alg. 1, running max + sum rescale);
+    this is the dataflow the fused Pallas attention kernel uses.
+
+Masking extends the paper (attention in decoder LMs is causal): masked
+positions contribute exactly zero to S and to the output — equivalent to
+the hardware simply not streaming those elements through the unit.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+# 1/ln2 ~= 1.442695 approximated by shifts: 1 + 1/2 - 1/16 (paper Eq. 8).
+INV_LN2_SHIFT_APPROX = 1.4375
+# Unbiasedness correction constant (paper Eq. 13).
+ALDIV_BIAS = 1.636
+
+
+def log2exp(x: Array, *, exp_bits: int = 4) -> Array:
+    """-round(log2(e^x)) for x <= 0, clipped to ``exp_bits`` bits.
+
+    Hardware: ``-(x + x>>1 - x>>4)`` followed by round + clip.
+    """
+    k = jnp.round(-x * INV_LN2_SHIFT_APPROX)
+    return jnp.clip(k, 0.0, float(2**exp_bits - 1)).astype(jnp.int32)
+
+
+def _split_sum(s: Array):
+    """S = 2^{k_s} (1 + frac) -> (k_s, q) with q the bit below leading one."""
+    mant, expo = jnp.frexp(jnp.maximum(s, 1e-38))  # mant in [0.5, 1)
+    k_s = expo.astype(jnp.int32) - 1               # leading-one position
+    q = (mant >= 0.75)                             # frac >= 0.5
+    return k_s, q
+
+
+def aldivision(k_y: Array, s: Array) -> Array:
+    """Approximate log-based division 2^{-k_y} / S (paper Eq. 13/17)."""
+    k_s, q = _split_sum(s)
+    factor = jnp.where(q, ALDIV_BIAS - 0.5, ALDIV_BIAS)
+    return jnp.exp2(-(k_y + k_s + 1).astype(jnp.float32)) * factor
+
+
+def e2softmax(
+    x: Array,
+    *,
+    axis: int = -1,
+    exp_bits: int = 4,
+    mask: Optional[Array] = None,
+    input_scale: Optional[Array] = None,
+) -> Array:
+    """Two-pass E2Softmax over ``axis``.
+
+    Args:
+      x: real-valued logits (any float dtype; computed in float32).
+      exp_bits: log2-quantization bit width of the exponent output.
+      mask: optional boolean mask (True = keep). Masked entries produce 0.
+      input_scale: if given, logits are first snapped to an int8 grid of
+        this scale (models the paper's 8-bit quantized inputs).
+    """
+    x = x.astype(jnp.float32)
+    if input_scale is not None:
+        x = jnp.clip(jnp.round(x / input_scale), -128, 127) * input_scale
+    neg = jnp.asarray(jnp.finfo(jnp.float32).min, jnp.float32)
+    xm = x if mask is None else jnp.where(mask, x, neg)
+    m = jnp.max(xm, axis=axis, keepdims=True)
+    # Guard fully-masked rows (m = -inf-ish): normalize against 0.
+    m = jnp.maximum(m, neg / 2)
+    k = log2exp(xm - m, exp_bits=exp_bits)
+    p = jnp.exp2(-k.astype(jnp.float32))
+    if mask is not None:
+        p = jnp.where(mask, p, 0.0)
+    s = jnp.sum(p, axis=axis, keepdims=True)
+    s = jnp.maximum(s, 2.0 ** -30)  # fully-masked rows -> tiny sum -> ~0 out
+    out = aldivision(k, s)
+    if mask is not None:
+        out = jnp.where(mask, out, 0.0)
+    return out
+
+
+def e2softmax_online(
+    x: Array,
+    *,
+    block: int = 128,
+    exp_bits: int = 4,
+    mask: Optional[Array] = None,
+) -> Array:
+    """Streaming E2Softmax (paper Alg. 1) over the last axis, in blocks.
+
+    Carries a running (max, sum); on a max update the sum is rescaled by
+    the *quantized* correction ``2^{-Log2Exp(m_old - m_new)}`` exactly as
+    the hardware's Correction path does. Stage 2 adds the per-block
+    correction ``Log2Exp(m_block - m_global)`` to the stored 4-bit codes.
+    """
+    x = x.astype(jnp.float32)
+    orig_len = x.shape[-1]
+    pad = (-orig_len) % block
+    neg = jnp.asarray(jnp.finfo(jnp.float32).min / 2, jnp.float32)
+    if mask is None:
+        mask = jnp.ones(x.shape, bool)
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+        mask = jnp.pad(mask, [(0, 0)] * (mask.ndim - 1) + [(0, pad)])
+    nblk = x.shape[-1] // block
+    bshape = x.shape[:-1] + (nblk, block)
+    xb = jnp.moveaxis(x.reshape(bshape), -2, 0)       # [nblk, ..., block]
+    mb = jnp.moveaxis(mask.reshape(bshape), -2, 0)
+
+    def step(carry, inp):
+        m_run, s_run = carry
+        xi, mi = inp
+        xi = jnp.where(mi, xi, neg)
+        m_blk = jnp.max(xi, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_run, m_blk)
+        # Correction: rescale the running sum by the quantized power of two.
+        sub = log2exp(m_run - m_new, exp_bits=exp_bits + 2)
+        k = log2exp(xi - m_new, exp_bits=exp_bits)
+        p = jnp.where(mi, jnp.exp2(-k.astype(jnp.float32)), 0.0)
+        s_new = s_run * jnp.exp2(-sub.astype(jnp.float32)) \
+            + jnp.sum(p, axis=-1, keepdims=True)
+        return (m_new, s_new), (k, m_new)
+
+    m0 = jnp.full(x.shape[:-1] + (1,), neg, jnp.float32)
+    s0 = jnp.zeros(x.shape[:-1] + (1,), jnp.float32)
+    (m_fin, s_fin), (ks, ms) = jax.lax.scan(step, (m0, s0), (xb, mb))
+
+    # Stage 2: per-block correction vs the global max, then ALDivision.
+    sub = log2exp(ms - m_fin[None], exp_bits=exp_bits + 2)  # [nblk, ..., 1]
+    k_tot = jnp.clip(ks + sub, 0, 2 ** (exp_bits + 2) - 1)
+    s_fin = jnp.maximum(s_fin, 2.0 ** -30)
+    out = aldivision(k_tot, s_fin[None])
+    out = jnp.where(mb, out, 0.0)
+    out = jnp.moveaxis(out, 0, -2).reshape(x.shape)
+    if pad:
+        out = out[..., :orig_len]
+    return out
+
+
+def pack_e2(k_tot: Array, q: Array) -> Array:
+    """Pack (k, q) into a uint8 code: k in [0,31] (5b), q 1b -> 6 bits."""
+    return (jnp.clip(k_tot, 0, 31) * 2 + q.astype(jnp.int32)).astype(jnp.uint8)
+
+
+def unpack_e2(code: Array) -> Array:
+    """Decode packed E2Softmax output back to float probabilities."""
+    k = (code >> 1).astype(jnp.float32)
+    q = (code & 1).astype(jnp.float32)
+    return jnp.exp2(-(k + 1.0)) * (ALDIV_BIAS - 0.5 * q)

@@ -1,0 +1,116 @@
+"""Quantization primitives used by SOLE (log2, int8 affine, PTF).
+
+All functions are pure jnp and bit-exact w.r.t. the integer semantics they
+model. See DESIGN.md §2 for the ASIC→TPU mapping.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def log2_quantize(x: Array, bits: int = 4) -> Array:
+    """Paper Eq. (2): Log2Q(X) = Clip(round(-log2(X)), 0, 2^b - 1), X in (0,1).
+
+    Returns the integer code k such that X ~= 2^{-k}.
+    """
+    k = jnp.round(-jnp.log2(jnp.maximum(x, 1e-38)))
+    return jnp.clip(k, 0, 2**bits - 1).astype(jnp.int32)
+
+
+def log2_dequantize(k: Array) -> Array:
+    return jnp.exp2(-k.astype(jnp.float32))
+
+
+@dataclasses.dataclass(frozen=True)
+class AffineQuantParams:
+    """Per-tensor affine int8 quantization parameters."""
+
+    scale: Array  # float32 scalar (or broadcastable)
+    zero_point: Array  # int32
+
+    def quantize(self, x: Array, *, unsigned: bool = False) -> Array:
+        lo, hi = (0, 255) if unsigned else (-128, 127)
+        q = jnp.round(x / self.scale) + self.zero_point
+        return jnp.clip(q, lo, hi).astype(jnp.int32)
+
+    def dequantize(self, q: Array) -> Array:
+        return (q.astype(jnp.float32) - self.zero_point) * self.scale
+
+
+def calibrate_affine(x: Array, *, unsigned: bool = False,
+                     symmetric: bool = True) -> AffineQuantParams:
+    """Min/max calibration of a per-tensor int8 quantizer."""
+    if symmetric and not unsigned:
+        amax = jnp.maximum(jnp.max(jnp.abs(x)), 1e-8)
+        scale = amax / 127.0
+        zp = jnp.zeros((), jnp.int32)
+    else:
+        xmin = jnp.minimum(jnp.min(x), 0.0)
+        xmax = jnp.maximum(jnp.max(x), xmin + 1e-8)
+        scale = (xmax - xmin) / 255.0
+        zp = jnp.round(-xmin / scale).astype(jnp.int32)
+    return AffineQuantParams(scale=scale, zero_point=zp)
+
+
+def fake_quant_int8(x: Array, *, symmetric: bool = True) -> Array:
+    """Quantize-dequantize round trip (simulated INT8 matmul inputs)."""
+    p = calibrate_affine(x, symmetric=symmetric)
+    return p.dequantize(p.quantize(x))
+
+
+# ---------------------------------------------------------------------------
+# Power-of-Two Factor (PTF) quantization — FQ-ViT [22], paper Eq. (6).
+#
+#   X_Q = Clip(round(X / (2^alpha * s)) + zp, 0, 2^b - 1)
+#
+# with a shared (s, zp) per tensor and a per-channel 2-bit alpha in {0..3}.
+# Channels with larger dynamic range get larger alpha so that their scaled
+# range matches the 8-bit code space.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PTFQuantParams:
+    scale: Array       # float32 scalar, shared
+    zero_point: Array  # int32 scalar, shared
+    alpha: Array       # int32 [C], per-channel power-of-two factor in {0..3}
+    unsigned: bool = True
+
+    def quantize(self, x: Array) -> Array:
+        lo, hi = (0, 255) if self.unsigned else (-128, 127)
+        denom = self.scale * jnp.exp2(self.alpha.astype(jnp.float32))
+        q = jnp.round(x / denom) + self.zero_point
+        return jnp.clip(q, lo, hi).astype(jnp.int32)
+
+    def dequantize(self, q: Array) -> Array:
+        denom = self.scale * jnp.exp2(self.alpha.astype(jnp.float32))
+        return (q.astype(jnp.float32) - self.zero_point) * denom
+
+
+def calibrate_ptf(x: Array, *, max_alpha: int = 3,
+                  unsigned: bool = True) -> PTFQuantParams:
+    """FQ-ViT-style PTF calibration over the last axis (channels).
+
+    Channel ranges are treated symmetrically around zero (zp = 128 for the
+    unsigned code space): the shared base scale is set by the *widest*
+    channel divided by 2^max_alpha, and each channel picks the smallest
+    alpha whose effective scale 2^alpha * s covers its range (ceil — no
+    range clipping, at most 2x resolution loss vs the per-channel ideal).
+    """
+    reduce_axes = tuple(range(x.ndim - 1))
+    amax = jnp.max(jnp.abs(x), axis=reduce_axes)
+    half = 127.0  # codes per side (zp-centered)
+    ideal = jnp.maximum(amax, 1e-8) / half     # per-channel ideal scale
+    scale = jnp.max(ideal) / float(2**max_alpha)
+    alpha = jnp.clip(jnp.ceil(jnp.log2(ideal / scale) - 1e-6), 0, max_alpha)
+    alpha = alpha.astype(jnp.int32)
+    zp = (jnp.full((), 128, jnp.int32) if unsigned
+          else jnp.zeros((), jnp.int32))
+    return PTFQuantParams(scale=scale, zero_point=zp, alpha=alpha,
+                          unsigned=unsigned)

@@ -1,0 +1,70 @@
+"""Pallas TPU kernel: AILayerNorm (SOLE integer statistics + affine).
+
+Input is the centered 8-bit code ``xi = x_q - zp`` (int32 carrier); the
+kernel performs dynamic compression, the y(y+1) 16-entry-LUT square, PTF
+shifts, int32 reductions, rsqrt and the fused affine — one pass, the
+statistics never leave VMEM (the ASIC's Stage1/Stage2 ping-pong collapses
+into a single resident tile).
+
+Rows are blocked; the channel axis stays whole in VMEM (C up to ~8k fits
+easily: block_rows x C x 4B).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(xi_ref, alpha_ref, gamma_ref, beta_ref, o_ref):
+    xi = xi_ref[...]                                    # (br, C) int32
+    c = xi.shape[-1]
+    alpha = alpha_ref[...]                              # (1, C) int32
+    a = jnp.abs(xi)
+    s = (a >= 64).astype(jnp.int32)
+    y = jnp.where(s == 1, a >> 4, a >> 2)
+    sq = (y * y + y) << (4 * s)                         # 16-entry LUT in HW
+    xs = xi << alpha
+    ex = jnp.sum(xs, axis=-1, keepdims=True)
+    ex2 = jnp.sum(sq << (2 * alpha), axis=-1, keepdims=True)
+    mu = ex.astype(jnp.float32) / c
+    var = jnp.maximum(ex2.astype(jnp.float32) * 16.0 / c - mu * mu, 1.0)
+    std_inv = jax.lax.rsqrt(var)
+    o_ref[...] = (gamma_ref[...] * std_inv
+                  * (xs.astype(jnp.float32) - mu) + beta_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def ailayernorm_pallas(xi, alpha, gamma, beta, *, block_rows: int = 256,
+                       interpret: bool = True):
+    """xi (..., C) int32 centered codes; alpha (C,) int32; gamma/beta (C,)."""
+    shape = xi.shape
+    c = shape[-1]
+    rows = 1
+    for d in shape[:-1]:
+        rows *= d
+    x2 = xi.reshape(rows, c)
+    br = min(block_rows, rows)
+    pad = (-rows) % br
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    out = pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct(x2.shape, jnp.float32),
+        grid=((rows + pad) // br,),
+        in_specs=[
+            pl.BlockSpec((br, c), lambda i: (i, 0)),
+            pl.BlockSpec((1, c), lambda i: (0, 0)),
+            pl.BlockSpec((1, c), lambda i: (0, 0)),
+            pl.BlockSpec((1, c), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, c), lambda i: (i, 0)),
+        interpret=interpret,
+    )(x2, alpha.reshape(1, c).astype(jnp.int32),
+      gamma.reshape(1, c).astype(jnp.float32),
+      beta.reshape(1, c).astype(jnp.float32))
+    if pad:
+        out = out[:rows]
+    return out.reshape(shape)

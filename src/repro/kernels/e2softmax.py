@@ -1,0 +1,68 @@
+"""Pallas TPU kernel: E2Softmax (SOLE Stage-1 + Stage-2 fused per row tile).
+
+Tiling: rows are blocked (grid over row tiles), the reduction axis stays
+resident in VMEM — one HBM read of the logits and one write of the
+probabilities, vs the two-stage HBM round trip of an unfused softmax.
+The 4-bit log2 codes exist only inside VMEM, playing the role of the
+paper's 4-bit intermediate buffer (DESIGN.md §2).
+
+Block shape defaults keep the working set well inside the ~128 MB v5e
+VMEM budget per core and the lane dim a multiple of 128 for the VPU.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.sole.e2softmax import ALDIV_BIAS, INV_LN2_SHIFT_APPROX
+
+
+def _kernel(x_ref, o_ref, *, exp_bits: int, int8_scale: Optional[float]):
+    x = x_ref[...].astype(jnp.float32)                 # (block_rows, C)
+    m = jnp.max(x, axis=-1, keepdims=True)
+    d = x - m
+    if int8_scale is not None:
+        d = jnp.clip(jnp.round(d / int8_scale), -127, 0) * int8_scale
+    # Log2Exp: -(x + x>>1 - x>>4), round, clip to exp_bits (4-bit codes)
+    k = jnp.clip(jnp.round(-d * INV_LN2_SHIFT_APPROX),
+                 0.0, float(2 ** exp_bits - 1))
+    p = jnp.exp2(-k)
+    s = jnp.sum(p, axis=-1, keepdims=True)
+    # ALDivision: S = 2^{k_s}(1+s'), q = bit under the leading one
+    mant, expo = jnp.frexp(jnp.maximum(s, 1e-38))
+    factor = jnp.where(mant >= 0.75, ALDIV_BIAS - 0.5, ALDIV_BIAS)
+    # out = 2^{-(k + k_s + 1)} * factor; k_s = expo - 1
+    o_ref[...] = jnp.exp2(-(k + expo.astype(jnp.float32))) * factor
+
+
+@functools.partial(jax.jit, static_argnames=("exp_bits", "int8_scale",
+                                             "block_rows", "interpret"))
+def e2softmax_pallas(x, *, exp_bits: int = 4,
+                     int8_scale: Optional[float] = None,
+                     block_rows: int = 256, interpret: bool = True):
+    """E2Softmax over the last axis of ``x`` (any leading dims)."""
+    shape = x.shape
+    c = shape[-1]
+    rows = 1
+    for d in shape[:-1]:
+        rows *= d
+    x2 = x.reshape(rows, c)
+    br = min(block_rows, rows)
+    pad = (-rows) % br
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_kernel, exp_bits=exp_bits, int8_scale=int8_scale),
+        out_shape=jax.ShapeDtypeStruct(x2.shape, jnp.float32),
+        grid=((rows + pad) // br,),
+        in_specs=[pl.BlockSpec((br, c), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, c), lambda i: (i, 0)),
+        interpret=interpret,
+    )(x2)
+    if pad:
+        out = out[:rows]
+    return out.reshape(shape)

@@ -1,0 +1,159 @@
+"""Pallas TPU kernel: fused Flash-E2Softmax attention (beyond-paper §7.1).
+
+The paper streams Softmax through a two-stage ASIC unit with 4-bit
+intermediate buffers; on TPU the same online normalization fuses the
+entire E2Softmax *into* the QK^T -> P@V pipeline:
+
+  * grid (batch*heads, q_blocks, kv_blocks), kv innermost;
+  * VMEM scratch carries the running (max, sum, acc) per q tile — the
+    O(S^2) stage-1 output never exists anywhere;
+  * the running sum is rescaled by the *quantized* correction
+    2^{-Log2Exp(dm)} exactly as the hardware Correction path does;
+  * ALDivision's per-row factor 2^{-(k_s+1)} (1.636 - q) is applied once
+    on the final accumulator;
+  * causal q-block/kv-block pairs that are fully masked are *skipped*
+    (pl.when), halving compute vs the XLA scan formulation — the ASIC's
+    "don't stream masked elements" trick, block-granular.
+
+MXU alignment: block_q = block_k = 128+ and head_dim a multiple of 128
+(64 is still fine on v5e via lane packing). bf16 inputs, fp32 accumulate.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.sole.e2softmax import ALDIV_BIAS, INV_LN2_SHIFT_APPROX
+
+NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, s_ref, acc_ref, *,
+            causal: bool, sole: bool, exp_bits: int,
+            int8_scale: Optional[float], kv_len: int, scale: float,
+            exact_corr: bool):
+    iq, ik = pl.program_id(1), pl.program_id(2)
+    nk = pl.num_programs(2)
+    bq, d = q_ref.shape[1], q_ref.shape[2]
+    bk = k_ref.shape[1]
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        s_ref[...] = jnp.zeros_like(s_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Block-level causal skip: block fully masked iff every q row < every
+    # k col, i.e. iq*bq + bq - 1 < ik*bk.
+    run = jnp.asarray(True)
+    if causal:
+        run = (iq * bq + bq - 1) >= (ik * bk)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0].astype(jnp.float32) * scale
+        k = k_ref[0].astype(jnp.float32)
+        v = v_ref[0].astype(jnp.float32)
+        logits = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)          # (bq, bk)
+        cols = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = cols < kv_len
+        if causal:
+            rows = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            mask = mask & (rows >= cols)
+        logits = jnp.where(mask, logits, NEG)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(logits, -1))
+        dm = logits - m_new[:, None]
+        if sole:
+            if int8_scale is not None:
+                dm = jnp.clip(jnp.round(dm / int8_scale), -127, 0) * int8_scale
+            kcode = jnp.clip(jnp.round(-dm * INV_LN2_SHIFT_APPROX),
+                             0.0, float(2 ** exp_bits - 1))
+            w = jnp.where(mask, jnp.exp2(-kcode), 0.0)
+            if exact_corr:
+                # beyond-paper: fp32 rescale (free on TPU — the running
+                # accumulator is fp32 VMEM anyway); recovers two-pass
+                # accuracy while keeping 4-bit w codes.
+                corr = jnp.exp2((m_prev - m_new) * 1.4426950408889634)
+            else:
+                # paper Alg.1: quantized Correction 2^{-Log2Exp(dm)}
+                sub = jnp.clip(
+                    jnp.round(-(m_prev - m_new) * INV_LN2_SHIFT_APPROX),
+                    0.0, float(2 ** (exp_bits + 2) - 1))
+                corr = jnp.exp2(-sub)
+        else:
+            w = jnp.where(mask,
+                          jnp.exp2(dm * 1.4426950408889634), 0.0)
+            corr = jnp.exp2((m_prev - m_new) * 1.4426950408889634)
+        m_ref[...] = m_new
+        s_ref[...] = s_ref[...] * corr + jnp.sum(w, -1)
+        acc_ref[...] = (acc_ref[...] * corr[:, None]
+                        + jax.lax.dot_general(
+                            w, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+
+    @pl.when(ik == nk - 1)
+    def _final():
+        s = jnp.maximum(s_ref[...], 2.0 ** -30)
+        if sole:
+            mant, expo = jnp.frexp(s)
+            factor = jnp.where(mant >= 0.75, ALDIV_BIAS - 0.5, ALDIV_BIAS)
+            scale_out = jnp.exp2(-expo.astype(jnp.float32)) * factor
+        else:
+            scale_out = 1.0 / s
+        o_ref[0] = acc_ref[...] * scale_out[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "sole", "exp_bits", "int8_scale", "block_q", "block_k",
+    "interpret", "exact_corr"))
+def flash_e2softmax_pallas(q, k, v, *, causal: bool = True,
+                           sole: bool = True, exp_bits: int = 4,
+                           int8_scale: Optional[float] = None,
+                           block_q: int = 128, block_k: int = 128,
+                           interpret: bool = True, exact_corr: bool = False):
+    """Fused attention. q,k,v: (BH, S, d) (fold batch*heads outside)."""
+    bh, s, d = q.shape
+    t = k.shape[1]
+    bq = min(block_q, s)
+    bk = min(block_k, t)
+    if causal and bq != bk:
+        bk = bq = min(bq, bk)
+    pad_q = (-s) % bq
+    pad_k = (-t) % bk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0)))
+    nq = (s + pad_q) // bq
+    nk = (t + pad_k) // bk
+    kern = functools.partial(
+        _kernel, causal=causal, sole=sole, exp_bits=exp_bits,
+        int8_scale=int8_scale, kv_len=t, scale=d ** -0.5,
+        exact_corr=exact_corr)
+    out = pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((bh, s + pad_q, d), jnp.float32),
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :s] if pad_q else out

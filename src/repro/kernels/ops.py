@@ -1,0 +1,62 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+``interpret=True`` (default here) executes the kernel bodies in Python on
+CPU — the TPU path just flips the flag. The wrappers handle layout
+folding (batch*heads), GQA broadcast, and PTF centering so callers pass
+model-layout tensors.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sole.quant import PTFQuantParams, calibrate_ptf
+from repro.kernels.ailayernorm import ailayernorm_pallas
+from repro.kernels.e2softmax import e2softmax_pallas
+from repro.kernels.flash_e2softmax import flash_e2softmax_pallas
+
+Array = jax.Array
+
+
+def e2softmax_op(x: Array, *, exp_bits: int = 4,
+                 int8_scale: Optional[float] = None,
+                 interpret: bool = True) -> Array:
+    """Drop-in softmax replacement over the last axis."""
+    return e2softmax_pallas(x, exp_bits=exp_bits, int8_scale=int8_scale,
+                            interpret=interpret)
+
+
+def ailayernorm_op(x: Array, gamma: Array, beta: Array, *,
+                   params: Optional[PTFQuantParams] = None,
+                   interpret: bool = True) -> Array:
+    """AILayerNorm on real inputs: PTF-quantize then integer kernel."""
+    if params is None:
+        params = calibrate_ptf(x, unsigned=True)
+    xq = params.quantize(x)
+    xi = xq - params.zero_point
+    return ailayernorm_pallas(xi, params.alpha, gamma, beta,
+                              interpret=interpret)
+
+
+def flash_attention_op(q: Array, k: Array, v: Array, *, causal: bool = True,
+                       sole: bool = True, exp_bits: int = 4,
+                       int8_scale: Optional[float] = None,
+                       block: int = 128, interpret: bool = True,
+                       exact_corr: bool = False) -> Array:
+    """Fused attention. q (B,S,H,hd), k/v (B,T,KV,hd) -> (B,S,H,hd)."""
+    b, s, h, hd = q.shape
+    t, kv = k.shape[1], k.shape[2]
+    if kv != h:
+        k = jnp.repeat(k, h // kv, axis=2)
+        v = jnp.repeat(v, h // kv, axis=2)
+    qf = jnp.moveaxis(q, 2, 1).reshape(b * h, s, hd)
+    kf = jnp.moveaxis(k, 2, 1).reshape(b * h, t, hd)
+    vf = jnp.moveaxis(v, 2, 1).reshape(b * h, t, hd)
+    out = flash_e2softmax_pallas(qf, kf, vf, causal=causal, sole=sole,
+                                 exp_bits=exp_bits, int8_scale=int8_scale,
+                                 block_q=block, block_k=block,
+                                 interpret=interpret, exact_corr=exact_corr)
+    out = out.reshape(b, h, s, hd)
+    return jnp.moveaxis(out, 1, 2).astype(q.dtype)

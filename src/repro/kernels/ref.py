@@ -1,0 +1,83 @@
+"""Pure-jnp oracles for the Pallas kernels (bit-identical semantics).
+
+The kernels and these references share the integer pipeline from
+``repro.core.sole``; tests sweep shapes/dtypes and assert_allclose
+kernel-vs-oracle (exact for the integer codes, fp32-tolerance for the
+float accumulations).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sole.ailayernorm import compressed_square
+from repro.core.sole.e2softmax import ALDIV_BIAS, aldivision, log2exp
+
+Array = jax.Array
+
+
+def e2softmax_ref(x: Array, *, exp_bits: int = 4,
+                  int8_scale: Optional[float] = None) -> Array:
+    """Two-pass E2Softmax over the last axis (matches kernel tiling)."""
+    x = x.astype(jnp.float32)
+    m = jnp.max(x, -1, keepdims=True)
+    d = x - m
+    if int8_scale is not None:
+        d = jnp.clip(jnp.round(d / int8_scale), -127, 0) * int8_scale
+    k = log2exp(d, exp_bits=exp_bits)
+    p = jnp.exp2(-k.astype(jnp.float32))
+    s = jnp.sum(p, -1, keepdims=True)
+    return aldivision(k, s)
+
+
+def ailayernorm_ref(xi: Array, alpha: Array, gamma: Array,
+                    beta: Array) -> Array:
+    """Integer AILayerNorm on centered codes xi = x_q - zp (int32)."""
+    c = xi.shape[-1]
+    sq = compressed_square(jnp.abs(xi))
+    xs = xi << alpha
+    ex = jnp.sum(xs, -1, keepdims=True)
+    ex2 = jnp.sum(sq << (2 * alpha), -1, keepdims=True)
+    mu = ex.astype(jnp.float32) / c
+    var = jnp.maximum(ex2.astype(jnp.float32) * 16.0 / c - mu * mu, 1.0)
+    return gamma * jax.lax.rsqrt(var) * (xs.astype(jnp.float32) - mu) + beta
+
+
+def flash_e2softmax_ref(q: Array, k: Array, v: Array, *, causal: bool,
+                        exp_bits: int = 4,
+                        int8_scale: Optional[float] = None,
+                        sole: bool = True) -> Array:
+    """Attention with E2Softmax probabilities (or exact softmax).
+
+    q, k, v: (B, S, d) single-head layout; returns (B, S, d) fp32.
+    """
+    q = q.astype(jnp.float32)
+    kk = k.astype(jnp.float32)
+    vv = v.astype(jnp.float32)
+    d = q.shape[-1]
+    logits = jnp.einsum("bsd,btd->bst", q * (d ** -0.5), kk)
+    if causal:
+        s, t = logits.shape[-2:]
+        mask = jnp.arange(s)[:, None] >= jnp.arange(t)[None, :]
+        logits = jnp.where(mask, logits, -jnp.inf)
+    m = jnp.max(logits, -1, keepdims=True)
+    dd = logits - m
+    if sole:
+        if int8_scale is not None:
+            dd = jnp.clip(jnp.round(dd / int8_scale), -127, 0) * int8_scale
+        kc = log2exp(dd, exp_bits=exp_bits)
+        p = jnp.exp2(-kc.astype(jnp.float32))
+        if causal:
+            p = jnp.where(mask, p, 0.0)
+        ssum = jnp.sum(p, -1, keepdims=True)
+        mant, expo = jnp.frexp(jnp.maximum(ssum, 1e-38))  # s = mant * 2^expo
+        factor = jnp.where(mant >= 0.75, ALDIV_BIAS - 0.5, ALDIV_BIAS)
+        # ALDivision with k_y=0: 2^{-(k_s+1)} * factor, k_s = expo - 1.
+        scale = jnp.exp2(-expo.astype(jnp.float32)) * factor
+        return jnp.einsum("bst,btd->bsd", p, vv) * scale
+    p = jnp.exp(dd)
+    if causal:
+        p = jnp.where(mask, p, 0.0)
+    return jnp.einsum("bst,btd->bsd", p, vv) / jnp.sum(p, -1, keepdims=True)

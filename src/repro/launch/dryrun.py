@@ -1,0 +1,226 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST precede any jax import: jax locks the device
+# count at first init, and the production meshes need 512 placeholders.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this builds the real train/prefill/decode step function,
+jit-lowers it with the production shardings, compiles it, and records:
+  * memory_analysis()  — proves the per-device footprint fits,
+  * cost_analysis()    — XLA's own counters (while bodies counted once),
+  * the HLO-walker roofline terms (trip-count-corrected; DESIGN.md §8).
+
+Results are written one JSON file per cell (atomic) under
+``roofline/results/`` and aggregated into EXPERIMENTS.md tables by
+``python -m repro.roofline.report``.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2_0_5b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ARCH_NAMES, SHAPES, ArchConfig, ShapeConfig, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.models import api
+from repro.roofline.analysis import make_roofline
+from repro.roofline.hlo_cost import analyze_text
+from repro.sharding import rules as R
+from repro.train.optimizer import OptConfig, init_opt_state
+from repro.train.trainer import make_train_step
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "roofline_results")
+
+
+def _shardings(rules: R.Rules, axes_tree, sds_tree):
+    shapes = jax.tree.map(lambda t: tuple(t.shape), sds_tree)
+    specs = R.param_specs(axes_tree, shapes, rules)
+    return jax.tree.map(lambda s: jax.NamedSharding(rules.mesh, s), specs)
+
+
+def _serve_params(cfg: ArchConfig):
+    """Abstract bf16 serving params + axes (no allocation)."""
+    model = api.get_model(cfg)
+    p_sds = jax.eval_shape(
+        lambda k: model.init(k, cfg),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+    from repro.models.layers import split_params
+    vals, axes = split_params(p_sds)
+    vals = jax.tree.map(
+        lambda t: jax.ShapeDtypeStruct(
+            t.shape, jnp.dtype(cfg.dtype) if t.dtype == jnp.float32 else t.dtype),
+        vals)
+    return vals, axes
+
+
+def _train_artifacts(cfg: ArchConfig, shape: ShapeConfig, rules: R.Rules):
+    model = api.get_model(cfg)
+    p_sds = jax.eval_shape(lambda k: model.init(k, cfg),
+                           jax.ShapeDtypeStruct((2,), jnp.uint32))
+    from repro.models.layers import split_params
+    params, axes = split_params(p_sds)
+    opt = jax.eval_shape(init_opt_state, params)
+    batch, batch_axes = api.train_inputs(cfg, shape)
+    pshapes = jax.tree.map(lambda t: tuple(t.shape), params)
+    bshapes = jax.tree.map(lambda t: tuple(t.shape), batch)
+    step, _ = make_train_step(cfg, OptConfig(), rules, axes, pshapes,
+                              batch_axes, bshapes)
+    return step, (params, opt, batch)
+
+
+def _prefill_artifacts(cfg: ArchConfig, shape: ShapeConfig, rules: R.Rules):
+    model = api.get_model(cfg)
+    params, paxes = _serve_params(cfg)
+    batch, baxes = api.prefill_inputs(cfg, shape)
+    pshard = _shardings(rules, paxes, params)
+    bshard = _shardings(rules, baxes, batch)
+
+    if cfg.family in ("encdec", "vlm"):
+        def fn(p, b):
+            with R.use_rules(rules):
+                return model.prefill(p, b, cfg, shape.seq_len)
+    else:
+        def fn(p, b):
+            with R.use_rules(rules):
+                return model.prefill(p, b["tokens"], cfg, shape.seq_len)
+
+    step = jax.jit(fn, in_shardings=(pshard, bshard))
+    return step, (params, batch)
+
+
+def _decode_artifacts(cfg: ArchConfig, shape: ShapeConfig, rules: R.Rules):
+    model = api.get_model(cfg)
+    params, paxes = _serve_params(cfg)
+    cache, caxes, token, pos = api.decode_inputs(cfg, shape)
+    pshard = _shardings(rules, paxes, params)
+    cshard = _shardings(rules, caxes, cache)
+    tshard = jax.NamedSharding(
+        rules.mesh, rules.spec(("batch",), (shape.global_batch,)))
+    sshard = jax.NamedSharding(rules.mesh, jax.sharding.PartitionSpec())
+
+    def fn(p, c, t, i):
+        with R.use_rules(rules):
+            return model.decode_step(p, c, t, i, cfg)
+
+    step = jax.jit(fn, in_shardings=(pshard, cshard, tshard, sshard),
+                   donate_argnums=(1,))
+    return step, (params, cache, token, pos)
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             out_dir: str = RESULTS_DIR, overrides: dict = None,
+             tag: str = "") -> dict:
+    import dataclasses as _dc
+    cfg = get_config(arch)
+    if overrides:
+        typed = {}
+        for k, val in overrides.items():
+            cur = getattr(cfg, k)
+            typed[k] = type(cur)(val) if cur is not None else val
+        cfg = _dc.replace(cfg, **typed)
+    shape = SHAPES[shape_name]
+    t0 = time.time()
+    result = {"arch": arch + (f"+{tag}" if tag else ""), "shape": shape_name,
+              "mesh": mesh_kind, "status": "ok", "overrides": overrides or {}}
+    if shape_name in cfg.skip_shapes:
+        result["status"] = "skipped"
+        result["reason"] = ("full-attention arch: 500k-token decode is not "
+                            "sub-quadratic (DESIGN.md §4)"
+                            if shape_name == "long_500k" else "per config")
+        _write(out_dir, result)
+        return result
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    chips = mesh.devices.size
+    rules = R.make_rules_for(cfg, mesh)
+    try:
+        with mesh:
+            if shape.kind == "train":
+                step, args = _train_artifacts(cfg, shape, rules)
+            elif shape.kind == "prefill":
+                step, args = _prefill_artifacts(cfg, shape, rules)
+            else:
+                step, args = _decode_artifacts(cfg, shape, rules)
+            with R.use_rules(rules):
+                lowered = step.lower(*args)
+            compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        cost = analyze_text(compiled.as_text())
+        roof = make_roofline(cfg, shape, mesh_kind, chips, cost)
+        row = roof.row()
+        row["arch"] = result["arch"]      # keep the +tag suffix
+        result.update(row)
+        result["memory"] = {
+            "argument_bytes": int(mem.argument_size_in_bytes),
+            "output_bytes": int(mem.output_size_in_bytes),
+            "temp_bytes": int(mem.temp_size_in_bytes),
+            "alias_bytes": int(mem.alias_size_in_bytes),
+            "code_bytes": int(mem.generated_code_size_in_bytes),
+        }
+        per_dev = (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                   + mem.temp_size_in_bytes - mem.alias_size_in_bytes) / chips
+        result["memory"]["per_device_bytes"] = int(per_dev)
+        result["memory"]["fits_16gb"] = bool(per_dev < 16e9)
+        result["xla_cost_analysis"] = {
+            "flops": float(ca.get("flops", 0.0)),
+            "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+        }
+        result["compile_s"] = time.time() - t0
+    except Exception as e:  # a failing cell is a bug — record it loudly
+        result["status"] = "error"
+        result["error"] = f"{type(e).__name__}: {e}"
+        result["traceback"] = traceback.format_exc()[-4000:]
+        result["compile_s"] = time.time() - t0
+    _write(out_dir, result)
+    return result
+
+
+def _write(out_dir: str, result: dict) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    name = f"{result['arch']}__{result['shape']}__{result['mesh']}.json"
+    tmp = os.path.join(out_dir, name + ".tmp")
+    with open(tmp, "w") as f:
+        json.dump(result, f, indent=1, default=str)
+    os.replace(tmp, os.path.join(out_dir, name))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default=RESULTS_DIR)
+    ap.add_argument("--set", action="append", default=[],
+                    help="config override key=value (e.g. kv_cache_dtype=int8)")
+    ap.add_argument("--tag", default="", help="suffix for the result name")
+    args = ap.parse_args()
+    overrides = dict(kv.split("=", 1) for kv in getattr(args, "set"))
+
+    archs = ARCH_NAMES if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                r = run_cell(arch, shape, mesh_kind, args.out,
+                             overrides=overrides, tag=args.tag)
+                dom = r.get("dominant", "-")
+                print(f"[{r['status']:>7}] {arch:20s} {shape:12s} "
+                      f"{mesh_kind:6s} dominant={dom} "
+                      f"t={r.get('compile_s', 0):.1f}s "
+                      f"{r.get('error', '')}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Production mesh construction.
+
+Defined as functions (not module constants) so importing never touches
+jax device state. The dry-run sets XLA_FLAGS for 512 host devices before
+any jax import; tests/benches see the real single device.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+from repro.sharding.rules import Rules
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
+    return jax.make_mesh(shape, axes)
+
+
+def make_rules(mesh, table: Optional[dict] = None) -> Rules:
+    return Rules(mesh, table)
+
+
+def smoke_mesh(data: int = 2, model: int = 2):
+    """Small mesh for CPU tests (requires >= data*model fake devices)."""
+    n = len(jax.devices())
+    data = min(data, max(n // model, 1))
+    if data * model > n:
+        model = n // data
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,68 @@
+"""Training launcher.
+
+Examples:
+  # smoke-scale run on CPU (fake devices):
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2_0_5b --smoke \
+    --steps 50 --mesh 4,2
+
+  # production lowering only (no execution) is launch/dryrun.py.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+
+from repro.configs.base import SHAPES, ShapeConfig, get_config
+from repro.launch.mesh import make_mesh, make_rules
+from repro.train.optimizer import OptConfig
+from repro.train.trainer import Trainer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k", choices=list(SHAPES))
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config + small shape (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--mesh", default="", help="e.g. 4,2 => (data, model)")
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke()
+        shape = ShapeConfig("smoke", seq_len=64, global_batch=8, kind="train")
+    else:
+        shape = SHAPES[args.shape]
+
+    if args.mesh:
+        dims = tuple(int(x) for x in args.mesh.split(","))
+        axes = ("data", "model")[:len(dims)] if len(dims) <= 2 else \
+            ("pod", "data", "model")
+        mesh = make_mesh(dims, axes)
+    else:
+        n = len(jax.devices())
+        mesh = make_mesh((n, 1), ("data", "model"))
+    rules = make_rules(mesh)
+
+    opt = OptConfig(lr=args.lr, warmup_steps=min(100, args.steps // 10 + 1),
+                    total_steps=args.steps)
+    trainer = Trainer(cfg, shape, opt, rules, ckpt_dir=args.ckpt_dir,
+                      seed=args.seed)
+    out = trainer.run(args.steps)
+    print(json.dumps({
+        "arch": cfg.name, "steps": args.steps,
+        "first_loss": out["metrics"][0]["loss"],
+        "final_loss": out["final_loss"],
+        "stragglers": len(out["stragglers"]),
+    }, indent=2))
+
+
+if __name__ == "__main__":
+    main()

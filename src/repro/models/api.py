@@ -1,0 +1,131 @@
+"""Unified model API: family registry, loss, and abstract input specs.
+
+Every architecture family exposes init / forward / init_cache / prefill /
+decode_step; this module dispatches on ``cfg.family`` and defines the
+training loss (next-token cross-entropy + MoE aux loss) and the
+ShapeDtypeStruct input builders used by the dry-run (no allocation).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+
+Array = jax.Array
+
+_FAMILY_MODULES = {
+    "dense": "repro.models.transformer",
+    "moe": "repro.models.moe",
+    "encdec": "repro.models.whisper",
+    "vlm": "repro.models.vlm",
+    "ssm": "repro.models.rwkv6",
+    "hybrid": "repro.models.rglru",
+}
+
+AUX_LOSS_WEIGHT = 0.01
+WHISPER_DEC_LEN = 448
+
+
+def get_model(cfg: ArchConfig):
+    return importlib.import_module(_FAMILY_MODULES[cfg.family])
+
+
+def init_params(rng, cfg: ArchConfig):
+    """Returns (param value tree, logical-axes tree)."""
+    from repro.models.layers import split_params
+    return split_params(get_model(cfg).init(rng, cfg))
+
+
+def forward(params, batch: Dict[str, Array], cfg: ArchConfig,
+            phase: str = "serve"):
+    m = get_model(cfg)
+    if cfg.family in ("dense", "ssm", "hybrid"):
+        return m.forward(params, batch["tokens"], cfg, phase)
+    if cfg.family == "moe":
+        logits, _ = m.forward(params, batch["tokens"], cfg, phase)
+        return logits
+    return m.forward(params, batch, cfg, phase)
+
+
+def cross_entropy(logits: Array, targets: Array) -> Array:
+    """Mean next-token NLL. logits (B,S,V) fp32, targets (B,S) int32."""
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def loss_fn(params, batch: Dict[str, Array], cfg: ArchConfig
+            ) -> Tuple[Array, Dict[str, Array]]:
+    m = get_model(cfg)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.family in ("dense", "ssm", "hybrid"):
+        logits = m.forward(params, batch["tokens"], cfg, "train")
+    elif cfg.family == "moe":
+        logits, aux = m.forward(params, batch["tokens"], cfg, "train")
+    else:
+        logits = m.forward(params, batch, cfg, "train")
+    xent = cross_entropy(logits, batch["targets"])
+    loss = xent + AUX_LOSS_WEIGHT * aux
+    return loss, {"xent": xent, "aux": aux}
+
+
+# -- abstract input specs (dry-run: ShapeDtypeStruct, zero allocation) --------
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def train_inputs(cfg: ArchConfig, shape: ShapeConfig):
+    """(batch SDS tree, logical-axes tree) for train_step."""
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.family == "encdec":
+        t = min(WHISPER_DEC_LEN, s)
+        batch = {"frames": _sds((b, s, cfg.d_model), cfg.dtype),
+                 "tokens": _sds((b, t), jnp.int32),
+                 "targets": _sds((b, t), jnp.int32)}
+        axes = {"frames": ("batch", None, None), "tokens": ("batch", None),
+                "targets": ("batch", None)}
+    elif cfg.family == "vlm":
+        batch = {"embeds": _sds((b, s, cfg.d_model), cfg.dtype),
+                 "positions": _sds((3, b, s), jnp.int32),
+                 "targets": _sds((b, s), jnp.int32)}
+        axes = {"embeds": ("batch", None, None),
+                "positions": (None, "batch", None),
+                "targets": ("batch", None)}
+    else:
+        batch = {"tokens": _sds((b, s), jnp.int32),
+                 "targets": _sds((b, s), jnp.int32)}
+        axes = {"tokens": ("batch", None), "targets": ("batch", None)}
+    return batch, axes
+
+
+def prefill_inputs(cfg: ArchConfig, shape: ShapeConfig):
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.family == "encdec":
+        t = min(WHISPER_DEC_LEN, s)
+        return ({"frames": _sds((b, s, cfg.d_model), cfg.dtype),
+                 "tokens": _sds((b, t), jnp.int32)},
+                {"frames": ("batch", None, None), "tokens": ("batch", None)})
+    if cfg.family == "vlm":
+        return ({"embeds": _sds((b, s, cfg.d_model), cfg.dtype),
+                 "positions": _sds((3, b, s), jnp.int32)},
+                {"embeds": ("batch", None, None),
+                 "positions": (None, "batch", None)})
+    return ({"tokens": _sds((b, s), jnp.int32)},
+            {"tokens": ("batch", None)})
+
+
+def decode_inputs(cfg: ArchConfig, shape: ShapeConfig):
+    """(cache SDS tree, cache axes, token SDS, pos SDS)."""
+    b, s = shape.global_batch, shape.seq_len
+    m = get_model(cfg)
+    cache = jax.eval_shape(lambda: m.init_cache(cfg, b, s))
+    axes = m.cache_axes(cfg)
+    token = _sds((b,), jnp.int32)
+    pos = _sds((), jnp.int32)
+    return cache, axes, token, pos

@@ -1,0 +1,301 @@
+"""RWKV-6 "Finch" — attention-free token mixing with data-dependent decay
+[arXiv:2404.05892], adapted to the framework's functional API.
+
+E2Softmax is inapplicable here (no softmax in the block — recorded in
+DESIGN.md §Arch-applicability); AILayerNorm applies to the pre-norms and
+to the per-head GroupNorm (AIGroupNorm: same integer pipeline over the
+head dim).
+
+The WKV recurrence S_t = diag(w_t) S_{t-1} + k_t^T v_t runs as a
+jax.lax.scan over time with (B, H) vectorized — head-sharded over the
+model axis. Decode carries (last_x_tm, last_x_cm, S) per layer: O(1)
+state, which is why rwkv6 runs the long_500k cell.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models.transformer import remat_wrap
+from repro.sharding.rules import constrain
+
+Array = jax.Array
+LORA_R = 32      # token-shift lora rank
+DECAY_R = 64     # decay lora rank
+
+
+def init_time_mix(key, cfg: ArchConfig):
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.rwkv_head_size
+    ks = jax.random.split(key, 10)
+    return {
+        "mu_x": L.zeros_param((d,), ("embed",)),
+        "mu": L.zeros_param((5, d), (None, "embed")),          # w,k,v,r,g
+        "lora_a": L.make_param(ks[0], (d, 5 * LORA_R), ("embed", None)),
+        "lora_b": L.make_param(ks[1], (5, LORA_R, d), (None, None, "embed")),
+        "w0": L.Param(jnp.full((d,), -6.0, jnp.float32), ("embed",)),
+        "w1": L.make_param(ks[2], (d, DECAY_R), ("embed", None)),
+        "w2": L.make_param(ks[3], (DECAY_R, d), (None, "embed")),
+        "wr": L.make_param(ks[4], (d, h, hd), ("embed", "heads", "head_dim")),
+        "wk": L.make_param(ks[5], (d, h, hd), ("embed", "heads", "head_dim")),
+        "wv": L.make_param(ks[6], (d, h, hd), ("embed", "heads", "head_dim")),
+        "wg": L.make_param(ks[7], (d, h, hd), ("embed", "heads", "head_dim")),
+        "u": L.make_param(ks[8], (h, hd), ("heads", "head_dim")),
+        "wo": L.make_param(ks[9], (h, hd, d), ("heads", "head_dim", "embed")),
+        "gn_g": L.ones_param((h, hd), ("heads", "head_dim")),
+        "gn_b": L.zeros_param((h, hd), ("heads", "head_dim")),
+    }
+
+
+def init_channel_mix(key, cfg: ArchConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": L.zeros_param((d,), ("embed",)),
+        "mu_r": L.zeros_param((d,), ("embed",)),
+        "wk": L.make_param(ks[0], (d, f), ("embed", "ff")),
+        "wv": L.make_param(ks[1], (f, d), ("ff", "embed")),
+        "wr": L.make_param(ks[2], (d, d), ("embed", "embed2")),
+    }
+
+
+def init_layer(key, cfg: ArchConfig):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": L.init_norm(cfg),
+        "tm": init_time_mix(k1, cfg),
+        "ln2": L.init_norm(cfg),
+        "cm": init_channel_mix(k2, cfg),
+    }
+
+
+def init(rng, cfg: ArchConfig):
+    ke, kl = jax.random.split(rng)
+    keys = jax.random.split(kl, cfg.n_layers)
+    stack = jax.vmap(lambda k: init_layer(k, cfg))(keys)
+    return {
+        "embed": L.init_embed(ke, cfg),
+        "layers": L.stack_layer_params(stack),
+        "final_norm": L.init_norm(cfg),
+    }
+
+
+def _group_norm(o: Array, g: Array, b: Array, cfg: ArchConfig,
+                phase: str) -> Array:
+    """Per-head LayerNorm over head_dim; SOLE AIGroupNorm when serving."""
+    mode = cfg.train_norm_mode if phase == "train" else cfg.norm_mode
+    from repro.core.nonlin import layernorm_fn
+    return layernorm_fn(mode)(o, g, b)
+
+
+def _shift(x: Array, last: Array) -> Array:
+    """Token shift: previous timestep's activation (last for t=0)."""
+    return jnp.concatenate([last[:, None], x[:, :-1]], axis=1)
+
+
+def _wkv_sequential(r, k, v, w, u, state):
+    """Reference WKV recurrence: one jax.lax.scan step per token.
+    r/k/v/w: (B,S,H,hd) fp32; state (B,H,hd,hd). Returns (o, state)."""
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp                          # (B,H,hd) each
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)      # rank-1 update
+        out = jnp.einsum("bhk,bhkv->bhv", rt, S + u[None, :, :, None] * kv)
+        S_new = wt[..., None] * S + kv
+        return S_new, out
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (r, k, v, w))
+    state, outs = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(outs, 0, 1), state
+
+
+def _wkv_chunked(r, k, v, w, u, state, chunk: int):
+    """Chunk-parallel WKV (§Perf: rwkv train memory hillclimb).
+
+    The sequential scan round-trips the (B,H,hd,hd) state through HBM
+    every token; processing ``chunk`` tokens per state visit divides the
+    state traffic by ``chunk`` and turns the inner work into
+    matmul-shaped contractions. Numerically safe by construction: with
+    L_t = cumsum(log w) (<= 0, per k-channel), every exponential here is
+    exp of a *difference of cumulative negative logs* along time, i.e.
+    exp(<= 0) — no 1/decay blow-ups:
+
+      inter:  o_t += (r_t * e^{L_{t-1}}) . S_in
+      intra:  s_{t,tau} = sum_d r_td k_taud e^{L_{t-1,d} - L_{tau,d}},
+              tau < t (strict); diagonal uses the u bonus;
+      state:  S_out = e^{L_C} * S_in + sum_tau (k_tau e^{L_C - L_tau})^T v_tau
+    """
+    b, s, h, hd = r.shape
+    nc = s // chunk
+
+    def resh(a):  # (B,S,H,hd) -> (nc, B, H, C, hd)
+        return jnp.moveaxis(
+            a.reshape(b, nc, chunk, h, hd).transpose(1, 0, 3, 2, 4), 0, 0)
+
+    rc, kc, vc = resh(r), resh(k), resh(v)
+    logw = jnp.log(jnp.maximum(resh(w), 1e-38))       # (nc,B,H,C,hd) <= 0
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+
+    def per_chunk(S, inp):
+        rt, kt, vt, lw = inp                          # (B,H,C,hd)
+        L = jnp.cumsum(lw, axis=2)                    # L_t
+        Lprev = L - lw                                # L_{t-1}
+        # inter-chunk: carry-in state
+        o = jnp.einsum("bhtd,bhdv->bhtv", rt * jnp.exp(Lprev), S)
+        # intra-chunk scores (strictly causal) + u-bonus diagonal
+        P = jnp.exp(Lprev[:, :, :, None, :] - L[:, :, None, :, :])
+        scores = jnp.einsum("bhtsd,bhsd->bhts",
+                            rt[:, :, :, None, :] * P, kt)
+        scores = jnp.where(tri[None, None], scores, 0.0)
+        diag = jnp.einsum("bhtd,bhtd->bht", rt * u[None, :, None, :], kt)
+        o = o + jnp.einsum("bhts,bhsv->bhtv", scores, vt)
+        o = o + diag[..., None] * vt
+        # state update
+        decay_out = jnp.exp(L[:, :, -1])              # (B,H,hd)
+        kd = kt * jnp.exp(L[:, :, -1:, :] - L)        # k_tau e^{L_C - L_tau}
+        S_new = decay_out[..., None] * S + jnp.einsum(
+            "bhsd,bhsv->bhdv", kd, vt)
+        return S_new, o
+
+    state, outs = jax.lax.scan(per_chunk, state, (rc, kc, vc, logw))
+    # outs: (nc, B, H, C, hd) -> (B, S, H, hd)
+    o = outs.transpose(1, 0, 3, 2, 4).reshape(b, s, h, hd)
+    return o, state
+
+
+def time_mix(p, x: Array, last_x: Array, state: Array, cfg: ArchConfig,
+             phase: str) -> Tuple[Array, Array, Array]:
+    """x: (B,S,D); last_x: (B,D); state: (B,H,hd,hd). Returns (out, last, S)."""
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.rwkv_head_size
+    xprev = _shift(x, last_x)
+    xx = xprev - x
+    xxx = x + xx * L.cast(p["mu_x"], cfg)
+    a = jnp.tanh(xxx @ L.cast(p["lora_a"], cfg)).reshape(b, s, 5, LORA_R)
+    a = jnp.einsum("bsnr,nrd->nbsd", a, L.cast(p["lora_b"], cfg))
+    mu = L.cast(p["mu"], cfg)
+    xw = x + xx * (mu[0] + a[0])
+    xk = x + xx * (mu[1] + a[1])
+    xv = x + xx * (mu[2] + a[2])
+    xr = x + xx * (mu[3] + a[3])
+    xg = x + xx * (mu[4] + a[4])
+
+    r = jnp.einsum("bsd,dhk->bshk", xr, L.cast(p["wr"], cfg))
+    k = jnp.einsum("bsd,dhk->bshk", xk, L.cast(p["wk"], cfg))
+    v = jnp.einsum("bsd,dhk->bshk", xv, L.cast(p["wv"], cfg))
+    g = jax.nn.silu(jnp.einsum("bsd,dhk->bshk", xg, L.cast(p["wg"], cfg)))
+    r = constrain(r, "batch", "seq", "heads", "head_dim")
+    k = constrain(k, "batch", "seq", "heads", "head_dim")
+    v = constrain(v, "batch", "seq", "heads", "head_dim")
+    # data-dependent decay w in (0, 1), fp32 for the recurrence
+    dw = jnp.tanh(xw.astype(jnp.float32) @ p["w1"]) @ p["w2"]
+    w = jnp.exp(-jnp.exp(p["w0"] + dw))        # (B,S,D)
+    w = w.reshape(b, s, h, hd)
+    w = constrain(w, "batch", "seq", "heads", "head_dim")
+    u = p["u"]                                  # (H, hd)
+
+    rf = r.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    chunk = cfg.rwkv_chunk
+    if chunk and s % chunk == 0 and s > chunk:
+        o, state = _wkv_chunked(rf, kf, vf, w, u, state, chunk)
+    else:
+        o, state = _wkv_sequential(rf, kf, vf, w, u, state)
+    o = _group_norm(o, p["gn_g"], p["gn_b"], cfg, phase)
+    o = (o.astype(g.dtype) * g)
+    out = jnp.einsum("bshk,hkd->bsd", o, L.cast(p["wo"], cfg))
+    return constrain(out, "batch", "seq", "embed"), x[:, -1], state
+
+
+def channel_mix(p, x: Array, last_x: Array, cfg: ArchConfig
+                ) -> Tuple[Array, Array]:
+    xprev = _shift(x, last_x)
+    xx = xprev - x
+    xk = x + xx * L.cast(p["mu_k"], cfg)
+    xr = x + xx * L.cast(p["mu_r"], cfg)
+    hidden = jnp.square(jax.nn.relu(xk @ L.cast(p["wk"], cfg)))
+    hidden = constrain(hidden, "batch", "seq", "ff")
+    out = jax.nn.sigmoid(xr @ L.cast(p["wr"], cfg)) * (hidden @ L.cast(p["wv"], cfg))
+    return constrain(out, "batch", "seq", "embed"), x[:, -1]
+
+
+def _empty_layer_state(cfg: ArchConfig, b: int):
+    h, hd = cfg.n_heads, cfg.rwkv_head_size
+    return {
+        "tm_x": jnp.zeros((b, cfg.d_model), jnp.float32),
+        "cm_x": jnp.zeros((b, cfg.d_model), jnp.float32),
+        "s": jnp.zeros((b, h, hd, hd), jnp.float32),
+    }
+
+
+STATE_AXES = {"tm_x": ("layers", "batch", "embed"),
+              "cm_x": ("layers", "batch", "embed"),
+              "s": ("layers", "batch", "heads", "head_dim", None)}
+
+
+def init_cache(cfg: ArchConfig, batch: int, length: int = 0):
+    one = _empty_layer_state(cfg, batch)
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape).copy(), one)
+
+
+def cache_axes(cfg: ArchConfig):
+    return dict(STATE_AXES)
+
+
+def _layer(x, lp, st, cfg: ArchConfig, phase: str):
+    h = L.apply_norm(x, lp["ln1"], cfg, phase)
+    tm_out, tm_x, s_new = time_mix(lp["tm"], h, st["tm_x"].astype(h.dtype),
+                                   st["s"], cfg, phase)
+    x = x + tm_out
+    h = L.apply_norm(x, lp["ln2"], cfg, phase)
+    cm_out, cm_x = channel_mix(lp["cm"], h, st["cm_x"].astype(h.dtype), cfg)
+    x = x + cm_out
+    st_new = {"tm_x": tm_x.astype(jnp.float32),
+              "cm_x": cm_x.astype(jnp.float32), "s": s_new}
+    return x, st_new
+
+
+def forward(params, tokens: Array, cfg: ArchConfig, phase: str) -> Array:
+    b, s = tokens.shape
+    x = L.embed_tokens(params["embed"], tokens, cfg)
+    st0 = _empty_layer_state(cfg, b)
+
+    def body(x, lp):
+        xo, _ = _layer(x, lp, st0, cfg, phase)
+        return xo, None
+
+    body_r = remat_wrap(body, cfg)
+    x, _ = jax.lax.scan(body_r, x, params["layers"])
+    x = L.apply_norm(x, params["final_norm"], cfg, phase)
+    return L.lm_logits(params["embed"], x, cfg)
+
+
+def prefill(params, tokens: Array, cfg: ArchConfig, cache_len: int = 0):
+    b, s = tokens.shape
+    x = L.embed_tokens(params["embed"], tokens, cfg)
+    st0 = _empty_layer_state(cfg, b)
+
+    def body(x, lp):
+        xo, st = _layer(x, lp, st0, cfg, "serve")
+        return xo, st
+
+    x, cache = jax.lax.scan(body, x, params["layers"])
+    x = L.apply_norm(x, params["final_norm"], cfg, "serve")
+    return L.lm_logits(params["embed"], x[:, -1:], cfg), cache
+
+
+def decode_step(params, cache, token: Array, pos: Array, cfg: ArchConfig):
+    x = L.embed_tokens(params["embed"], token[:, None], cfg)
+
+    def body(x, scanned):
+        lp, st = scanned
+        return _layer(x, lp, st, cfg, "serve")
+
+    x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+    x = L.apply_norm(x, params["final_norm"], cfg, "serve")
+    return L.lm_logits(params["embed"], x, cfg)[:, 0], new_cache

@@ -1,0 +1,169 @@
+"""Dense decoder-only LM (qwen2 / stablelm / nemotron / minitron / mixtral
+backbone). MoE archs reuse this module with the FFN swapped (models/moe.py).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.sharding.rules import constrain
+
+Array = jax.Array
+
+
+def remat_wrap(fn: Callable, cfg: ArchConfig) -> Callable:
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "full":
+        policy = jax.checkpoint_policies.nothing_saveable
+    else:
+        policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+    return jax.checkpoint(fn, policy=policy)
+
+
+def init_layer(key, cfg: ArchConfig, ffn_init=None):
+    k1, k2 = jax.random.split(key)
+    ffn_init = ffn_init or L.init_mlp
+    return {
+        "ln1": L.init_norm(cfg),
+        "attn": L.init_attention(k1, cfg),
+        "ln2": L.init_norm(cfg),
+        "mlp": ffn_init(k2, cfg),
+    }
+
+
+def init(rng, cfg: ArchConfig, ffn_init=None):
+    ke, kl = jax.random.split(rng)
+    keys = jax.random.split(kl, cfg.n_layers)
+    layer_stack = jax.vmap(lambda k: init_layer(k, cfg, ffn_init))(keys)
+    return {
+        "embed": L.init_embed(ke, cfg),
+        "layers": L.stack_layer_params(layer_stack),
+        "final_norm": L.init_norm(cfg),
+    }
+
+
+def _layer_fn(cfg: ArchConfig, phase: str, ffn_apply=None):
+    ffn_apply = ffn_apply or (lambda p, x, c, ph: L.apply_mlp(x, p, c))
+
+    def layer(x, lp, positions):
+        h = L.apply_norm(x, lp["ln1"], cfg, phase)
+        x = x + L.apply_attention(lp["attn"], h, positions, cfg, phase)
+        h = L.apply_norm(x, lp["ln2"], cfg, phase)
+        x = x + ffn_apply(lp["mlp"], h, cfg, phase)
+        return constrain(x, "batch", "seq", "embed")
+
+    return layer
+
+
+def forward(params, tokens: Array, cfg: ArchConfig, phase: str,
+            ffn_apply=None) -> Array:
+    """tokens (B, S) -> logits (B, S, padded_vocab)."""
+    x = L.embed_tokens(params["embed"], tokens, cfg)
+    positions = jnp.arange(tokens.shape[1])
+    layer = _layer_fn(cfg, phase, ffn_apply)
+    body = remat_wrap(lambda x, lp: (layer(x, lp, positions), None), cfg)
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x, params["layers"])
+    else:
+        leaves = [jax.tree.map(lambda a: a[i], params["layers"])
+                  for i in range(cfg.n_layers)]
+        for lp in leaves:
+            x, _ = body(x, lp)
+    x = L.apply_norm(x, params["final_norm"], cfg, phase)
+    return L.lm_logits(params["embed"], x, cfg)
+
+
+# -- serving ------------------------------------------------------------------
+
+
+def init_cache(cfg: ArchConfig, batch: int, length: int):
+    """Stacked dot-layout-native caches (see decode_attend_stacked):
+    k (L,B,KV,hd,T), v (L,B,KV,T,hd), one shared position ring (T,)."""
+    t = min(length, cfg.window) if cfg.window else length
+    dt = L.kv_store_dtype(cfg)
+    lk = (cfg.n_layers, batch, cfg.n_kv_heads, cfg.head_dim, t)
+    lv = (cfg.n_layers, batch, cfg.n_kv_heads, t, cfg.head_dim)
+    return {"k": jnp.zeros(lk, dt), "v": jnp.zeros(lv, dt),
+            "pos": jnp.full((t,), 2**30, jnp.int32)}
+
+
+def cache_axes(cfg: ArchConfig):
+    return {"k": ("layers", "batch", "kv_heads", "head_dim", None),
+            "v": ("layers", "batch", "kv_heads", None, "head_dim"),
+            "pos": (None,)}
+
+
+def prefill(params, tokens: Array, cfg: ArchConfig, cache_len: int,
+            ffn_apply=None) -> Tuple[Array, Dict[str, Array]]:
+    """Run the full prompt, returning last-position logits + filled cache."""
+    b, s = tokens.shape
+    x = L.embed_tokens(params["embed"], tokens, cfg)
+    positions = jnp.arange(s)
+    ffn_apply = ffn_apply or (lambda p, x, c, ph: L.apply_mlp(x, p, c))
+    t = min(cache_len, cfg.window) if cfg.window else cache_len
+
+    def layer(x, lp):
+        h = L.apply_norm(x, lp["ln1"], cfg, "serve")
+        q, k, v = L._project_qkv(lp["attn"], h, cfg)
+        if cfg.pos_kind == "rope":
+            q = L.apply_rope(q, positions, cfg)
+            k = L.apply_rope(k, positions, cfg)
+        impl = cfg.attn_impl
+        if impl == "auto":
+            impl = "blocked" if s >= 8192 else "dense"
+        fn = L.attend_blocked if impl == "blocked" else L.attend_dense
+        ctx = fn(q, k, v, positions, positions, cfg, "serve", causal=cfg.causal)
+        attn_out = jnp.einsum("bshk,hkd->bsd", ctx, L.cast(lp["attn"]["wo"], cfg))
+        x = x + attn_out
+        h = L.apply_norm(x, lp["ln2"], cfg, "serve")
+        x = x + ffn_apply(lp["mlp"], h, cfg, "serve")
+        kq, vq, pp = L.pack_prefill_cache(k, v, positions, t, cfg)
+        cache_l = {"k": kq, "v": vq, "pos": pp}
+        return constrain(x, "batch", "seq", "embed"), cache_l
+
+    x, cache = jax.lax.scan(layer, x, params["layers"])
+    cache = {"k": cache["k"], "v": cache["v"], "pos": cache["pos"][0]}
+    x = L.apply_norm(x, params["final_norm"], cfg, "serve")
+    logits = L.lm_logits(params["embed"], x[:, -1:], cfg)
+    return logits, cache
+
+
+def decode_step(params, cache, token: Array, pos: Array, cfg: ArchConfig,
+                ffn_apply=None) -> Tuple[Array, Dict[str, Array]]:
+    """One decode step. token (B,), pos scalar int32.
+
+    The stacked dot-native caches are READ-ONLY inside the layer scan
+    (no aliasing copies); each layer's new (k, v) column is emitted via
+    scan ys and all layers' columns are written in one batched
+    dynamic-update-slice afterwards — per-token HBM traffic is one read
+    of each layer's K/V + one tiny write (§Perf hillclimb A).
+    """
+    x = L.embed_tokens(params["embed"], token[:, None], cfg)
+    ffn_apply = ffn_apply or (lambda p, x, c, ph: L.apply_mlp(x, p, c))
+    t = cache["k"].shape[-1]
+    slot = jnp.mod(pos, t) if cfg.window else jnp.minimum(pos, t - 1)
+    cpos = jax.lax.dynamic_update_index_in_dim(
+        cache["pos"], pos.astype(jnp.int32), slot, 0)
+    ck, cv = cache["k"], cache["v"]      # read-only inside the layer scan
+
+    def layer(x, scanned):
+        lp, idx = scanned
+        h = L.apply_norm(x, lp["ln1"], cfg, "serve")
+        attn_out, k_col, v_row = L.decode_attend_stacked(
+            lp["attn"], h, ck, cv, cpos, idx, pos, cfg)
+        x = x + attn_out
+        h = L.apply_norm(x, lp["ln2"], cfg, "serve")
+        x = x + ffn_apply(lp["mlp"], h, cfg, "serve")
+        return x, (k_col, v_row)
+
+    x, (k_cols, v_rows) = jax.lax.scan(
+        layer, x, (params["layers"], jnp.arange(cfg.n_layers)))
+    ck, cv = L.write_kv_columns(ck, cv, k_cols, v_rows, slot)
+    x = L.apply_norm(x, params["final_norm"], cfg, "serve")
+    logits = L.lm_logits(params["embed"], x, cfg)
+    return logits[:, 0], {"k": ck, "v": cv, "pos": cpos}

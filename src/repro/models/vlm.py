@@ -1,0 +1,110 @@
+"""Qwen2-VL backbone — M-RoPE over (temporal, height, width) position ids
+[arXiv:2409.12191]. The vision patch frontend is a stub: ``input_specs``
+provides precomputed patch+text embeddings (B, S, d_model) plus the
+3-axis position ids (3, B, S). Text decode uses the token embedding table
+with all three position axes equal (the paper's text-token convention).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models.transformer import remat_wrap
+from repro.sharding.rules import constrain
+
+Array = jax.Array
+
+
+def init(rng, cfg: ArchConfig):
+    from repro.models.transformer import init as dense_init
+    return dense_init(rng, cfg)
+
+
+def forward(params, batch: Dict[str, Array], cfg: ArchConfig,
+            phase: str) -> Array:
+    """batch: {"embeds": (B,S,D), "positions": (3,B,S)} -> logits."""
+    x = L.cast(jnp.asarray(batch["embeds"]), cfg)
+    x = constrain(x, "batch", "seq", "embed")
+    positions3 = batch["positions"]
+
+    def layer(x, lp):
+        h = L.apply_norm(x, lp["ln1"], cfg, phase)
+        x = x + L.apply_attention_mrope(lp["attn"], h, positions3, cfg, phase)
+        h = L.apply_norm(x, lp["ln2"], cfg, phase)
+        x = x + L.apply_mlp(h, lp["mlp"], cfg)
+        return constrain(x, "batch", "seq", "embed"), None
+
+    x, _ = jax.lax.scan(remat_wrap(layer, cfg), x, params["layers"])
+    x = L.apply_norm(x, params["final_norm"], cfg, phase)
+    return L.lm_logits(params["embed"], x, cfg)
+
+
+# -- serving (text continuation after multimodal prefill) ---------------------
+
+
+def init_cache(cfg: ArchConfig, batch: int, length: int):
+    from repro.models.transformer import init_cache as dense_cache
+    return dense_cache(cfg, batch, length)
+
+
+def cache_axes(cfg: ArchConfig):
+    from repro.models.transformer import cache_axes as dense_axes
+    return dense_axes(cfg)
+
+
+def prefill(params, batch: Dict[str, Array], cfg: ArchConfig,
+            cache_len: int):
+    x = L.cast(jnp.asarray(batch["embeds"]), cfg)
+    positions3 = batch["positions"]
+    b, s, _ = x.shape
+    flat_pos = jnp.arange(s)
+    t = cache_len
+
+    def layer(x, lp):
+        h = L.apply_norm(x, lp["ln1"], cfg, "serve")
+        q, k, v = L._project_qkv(lp["attn"], h, cfg)
+        q = L.apply_mrope(q, positions3, cfg)
+        k = L.apply_mrope(k, positions3, cfg)
+        ctx = L.attend_dense(q, k, v, flat_pos, flat_pos, cfg, "serve")
+        x = x + jnp.einsum("bshk,hkd->bsd", ctx, L.cast(lp["attn"]["wo"], cfg))
+        h = L.apply_norm(x, lp["ln2"], cfg, "serve")
+        x = x + L.apply_mlp(h, lp["mlp"], cfg)
+        kq, vq, pp = L.pack_prefill_cache(k, v, flat_pos, t, cfg)
+        cache_l = {"k": kq, "v": vq, "pos": pp}
+        return x, cache_l
+
+    x, cache = jax.lax.scan(layer, x, params["layers"])
+    cache = {"k": cache["k"], "v": cache["v"], "pos": cache["pos"][0]}
+    x = L.apply_norm(x, params["final_norm"], cfg, "serve")
+    return L.lm_logits(params["embed"], x[:, -1:], cfg), cache
+
+
+def decode_step(params, cache, token: Array, pos: Array, cfg: ArchConfig):
+    x = L.embed_tokens(params["embed"], token[:, None], cfg)
+    pos3 = jnp.broadcast_to(pos, (3, token.shape[0], 1))
+    t = cache["k"].shape[-1]
+    slot = jnp.minimum(pos, t - 1)
+    cpos = jax.lax.dynamic_update_index_in_dim(
+        cache["pos"], pos.astype(jnp.int32), slot, 0)
+    ck, cv = cache["k"], cache["v"]
+
+    def layer(x, scanned):
+        lp, idx = scanned
+        h = L.apply_norm(x, lp["ln1"], cfg, "serve")
+        attn_out, k_col, v_row = L.decode_attend_stacked(
+            lp["attn"], h, ck, cv, cpos, idx, pos, cfg, positions3=pos3)
+        x = x + attn_out
+        h = L.apply_norm(x, lp["ln2"], cfg, "serve")
+        x = x + L.apply_mlp(h, lp["mlp"], cfg)
+        return x, (k_col, v_row)
+
+    x, (k_cols, v_rows) = jax.lax.scan(
+        layer, x, (params["layers"], jnp.arange(cfg.n_layers)))
+    ck, cv = L.write_kv_columns(ck, cv, k_cols, v_rows, slot)
+    x = L.apply_norm(x, params["final_norm"], cfg, "serve")
+    return L.lm_logits(params["embed"], x, cfg)[:, 0], {
+        "k": ck, "v": cv, "pos": cpos}

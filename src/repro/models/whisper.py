@@ -1,0 +1,209 @@
+"""Whisper-small backbone (enc-dec). The log-mel conv frontend is a stub:
+``input_specs`` provides precomputed frame embeddings (B, S_enc, d_model)
+with positional information already folded in (DESIGN.md §4).
+
+Shape interpretation for the assigned LM shapes (documented deviation):
+  train_4k     encoder frames = seq_len, decoder tokens = 448 (whisper's
+               decoding context), loss over decoder positions.
+  prefill_32k  encoder frames = seq_len + 448-token decoder prompt.
+  decode_32k   one decoder token against a self-KV cache of seq_len and a
+               1500-frame cross-attention context.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models.transformer import remat_wrap
+from repro.sharding.rules import constrain
+
+Array = jax.Array
+DEC_LEN = 448
+
+
+def init_enc_layer(key, cfg: ArchConfig):
+    k1, k2 = jax.random.split(key)
+    return {"ln1": L.init_norm(cfg), "attn": L.init_attention(k1, cfg),
+            "ln2": L.init_norm(cfg), "mlp": L.init_mlp(k2, cfg)}
+
+
+def init_dec_layer(key, cfg: ArchConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"ln1": L.init_norm(cfg), "attn": L.init_attention(k1, cfg),
+            "ln_x": L.init_norm(cfg), "xattn": L.init_attention(k2, cfg),
+            "ln2": L.init_norm(cfg), "mlp": L.init_mlp(k3, cfg)}
+
+
+def init(rng, cfg: ArchConfig):
+    ke, k1, k2 = jax.random.split(rng, 3)
+    enc = jax.vmap(lambda k: init_enc_layer(k, cfg))(
+        jax.random.split(k1, cfg.n_enc_layers))
+    dec = jax.vmap(lambda k: init_dec_layer(k, cfg))(
+        jax.random.split(k2, cfg.n_layers))
+    return {
+        "embed": L.init_embed(ke, cfg),
+        "enc_layers": L.stack_layer_params(enc),
+        "enc_norm": L.init_norm(cfg),
+        "dec_layers": L.stack_layer_params(dec),
+        "final_norm": L.init_norm(cfg),
+    }
+
+
+def _sin_pos(s: int, d: int) -> Array:
+    pos = jnp.arange(s, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, 2 * dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1)
+
+
+def encode(params, frames: Array, cfg: ArchConfig, phase: str) -> Array:
+    """frames (B, S_enc, D) -> encoder states (B, S_enc, D)."""
+    x = L.cast(jnp.asarray(frames), cfg)
+    s = x.shape[1]
+    positions = jnp.arange(s)
+
+    def layer(x, lp):
+        h = L.apply_norm(x, lp["ln1"], cfg, phase)
+        x = x + L.apply_attention(lp["attn"], h, positions, cfg, phase,
+                                  causal=False)
+        h = L.apply_norm(x, lp["ln2"], cfg, phase)
+        x = x + L.apply_mlp(h, lp["mlp"], cfg)
+        return constrain(x, "batch", "seq", "embed"), None
+
+    x, _ = jax.lax.scan(remat_wrap(layer, cfg), x, params["enc_layers"])
+    return L.apply_norm(x, params["enc_norm"], cfg, phase)
+
+
+def decode(params, tokens: Array, enc_out: Array, cfg: ArchConfig,
+           phase: str) -> Array:
+    b, s = tokens.shape
+    x = L.embed_tokens(params["embed"], tokens, cfg)
+    x = x + L.cast(_sin_pos(s, cfg.d_model), cfg)[None]
+    positions = jnp.arange(s)
+
+    def layer(x, lp):
+        h = L.apply_norm(x, lp["ln1"], cfg, phase)
+        x = x + L.apply_attention(lp["attn"], h, positions, cfg, phase,
+                                  causal=True)
+        h = L.apply_norm(x, lp["ln_x"], cfg, phase)
+        kv = L.cross_kv(lp["xattn"], enc_out, cfg)
+        x = x + L.apply_cross_attention(lp["xattn"], h, kv, cfg, phase)
+        h = L.apply_norm(x, lp["ln2"], cfg, phase)
+        x = x + L.apply_mlp(h, lp["mlp"], cfg)
+        return constrain(x, "batch", "seq", "embed"), None
+
+    x, _ = jax.lax.scan(remat_wrap(layer, cfg), x, params["dec_layers"])
+    x = L.apply_norm(x, params["final_norm"], cfg, phase)
+    return L.lm_logits(params["embed"], x, cfg)
+
+
+def forward(params, batch: Dict[str, Array], cfg: ArchConfig,
+            phase: str) -> Array:
+    enc_out = encode(params, batch["frames"], cfg, phase)
+    return decode(params, batch["tokens"], enc_out, cfg, phase)
+
+
+# -- serving ------------------------------------------------------------------
+
+
+def init_cache(cfg: ArchConfig, batch: int, length: int):
+    from repro.models.transformer import init_cache as dense_cache
+    stacked = dense_cache(cfg, batch, length)
+    ck = jnp.zeros((cfg.n_layers, batch, cfg.cross_len, cfg.n_kv_heads,
+                    cfg.head_dim), jnp.dtype(cfg.dtype))
+    return {"self": stacked, "cross_k": ck, "cross_v": ck,
+            "cross_pos": jnp.arange(cfg.cross_len, dtype=jnp.int32)}
+
+
+def cache_axes(cfg: ArchConfig):
+    from repro.models.transformer import cache_axes as dense_axes
+    xa = ("layers", "batch", "seq", "kv_heads", "head_dim")
+    return {"self": dense_axes(cfg),
+            "cross_k": xa, "cross_v": xa, "cross_pos": (None,)}
+
+
+def prefill(params, batch: Dict[str, Array], cfg: ArchConfig,
+            cache_len: int):
+    """Encode audio + run the decoder prompt, fill self/cross caches."""
+    enc_out = encode(params, batch["frames"], cfg, "serve")
+    enc_ctx = enc_out[:, :cfg.cross_len]
+    valid = enc_ctx.shape[1]
+    cross_pos = jnp.arange(cfg.cross_len, dtype=jnp.int32)
+    cross_pos = jnp.where(cross_pos < valid, cross_pos, 2**30)
+    if valid < cfg.cross_len:
+        enc_ctx = jnp.pad(enc_ctx, ((0, 0), (0, cfg.cross_len - valid),
+                                    (0, 0)))
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = L.embed_tokens(params["embed"], tokens, cfg)
+    x = x + L.cast(_sin_pos(s, cfg.d_model), cfg)[None]
+    positions = jnp.arange(s)
+    t = cache_len
+
+    def layer(x, lp):
+        h = L.apply_norm(x, lp["ln1"], cfg, "serve")
+        q, k, v = L._project_qkv(lp["attn"], h, cfg)
+        ctx = L.attend_dense(q, k, v, positions, positions, cfg, "serve")
+        x = x + jnp.einsum("bshk,hkd->bsd", ctx, L.cast(lp["attn"]["wo"], cfg))
+        h = L.apply_norm(x, lp["ln_x"], cfg, "serve")
+        ckv = L.cross_kv(lp["xattn"], enc_ctx, cfg)
+        x = x + L.apply_cross_attention(lp["xattn"], h, ckv, cfg, "serve",
+                                        k_pos=cross_pos)
+        h = L.apply_norm(x, lp["ln2"], cfg, "serve")
+        x = x + L.apply_mlp(h, lp["mlp"], cfg)
+        kq, vq, pp = L.pack_prefill_cache(k, v, positions, t, cfg)
+        cache_l = {"k": kq, "v": vq, "pos": pp}
+        return x, (cache_l, ckv[0].astype(jnp.dtype(cfg.dtype)),
+                   ckv[1].astype(jnp.dtype(cfg.dtype)))
+
+    x, (self_cache, ck, cv) = jax.lax.scan(layer, x, params["dec_layers"])
+    self_cache = {"k": self_cache["k"], "v": self_cache["v"],
+                  "pos": self_cache["pos"][0]}
+    x = L.apply_norm(x, params["final_norm"], cfg, "serve")
+    logits = L.lm_logits(params["embed"], x[:, -1:], cfg)
+    return logits, {"self": self_cache, "cross_k": ck, "cross_v": cv,
+                    "cross_pos": cross_pos}
+
+
+def decode_step(params, cache, token: Array, pos: Array, cfg: ArchConfig):
+    x = L.embed_tokens(params["embed"], token[:, None], cfg)
+    d = cfg.d_model
+    posv = jnp.arange(d // 2, dtype=jnp.float32)
+    ang = pos.astype(jnp.float32) / jnp.power(10000.0, 2 * posv / d)
+    x = x + jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])[None, None].astype(x.dtype)
+
+    t = cache["self"]["k"].shape[-1]
+    slot = jnp.minimum(pos, t - 1)
+    cpos = jax.lax.dynamic_update_index_in_dim(
+        cache["self"]["pos"], pos.astype(jnp.int32), slot, 0)
+    sk, sv = cache["self"]["k"], cache["self"]["v"]
+
+    def layer(x, scanned):
+        lp, idx, ck, cv = scanned
+        h = L.apply_norm(x, lp["ln1"], cfg, "serve")
+        attn_out, k_col, v_row = L.decode_attend_stacked(
+            lp["attn"], h, sk, sv, cpos, idx, pos, cfg, rope=False)
+        x = x + attn_out
+        h = L.apply_norm(x, lp["ln_x"], cfg, "serve")
+        x = x + L.apply_cross_attention(lp["xattn"], h,
+                                        (L.cast(ck, cfg), L.cast(cv, cfg)),
+                                        cfg, "serve",
+                                        k_pos=cache["cross_pos"])
+        h = L.apply_norm(x, lp["ln2"], cfg, "serve")
+        x = x + L.apply_mlp(h, lp["mlp"], cfg)
+        return x, (k_col, v_row)
+
+    x, (k_cols, v_rows) = jax.lax.scan(
+        layer, x, (params["dec_layers"], jnp.arange(cfg.n_layers),
+                   cache["cross_k"], cache["cross_v"]))
+    sk, sv = L.write_kv_columns(sk, sv, k_cols, v_rows, slot)
+    x = L.apply_norm(x, params["final_norm"], cfg, "serve")
+    logits = L.lm_logits(params["embed"], x, cfg)
+    return logits[:, 0], {"self": {"k": sk, "v": sv, "pos": cpos},
+                          "cross_k": cache["cross_k"],
+                          "cross_v": cache["cross_v"],
+                          "cross_pos": cache["cross_pos"]}

@@ -1,0 +1,118 @@
+"""Roofline terms from a compiled dry-run artifact (TPU v5e targets).
+
+  compute_s    = HLO_FLOPs / (chips * 197e12)        [bf16 MXU peak]
+  memory_s     = HLO_bytes / (chips * 819e9)         [HBM BW]
+  collective_s = collective_link_bytes / (chips * 50e9)  [per-link ICI]
+
+HLO_FLOPs / bytes / collective bytes come from the HLO walker (per-device
+program; multiplied by `chips` to report whole-system totals, then divided
+back — i.e. the terms are per-step wall-clock lower bounds assuming perfect
+overlap within each resource).
+
+MODEL_FLOPS uses the 6ND (train) / 2ND (inference) convention with
+N = active params; the ratio MODEL_FLOPS / HLO_FLOPs shows how much of
+the compiled compute is "useful" (remat recompute, attention quadratic
+terms and dispatch overhead all lower it).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.roofline.hlo_cost import Cost
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s / chip
+ICI_BW = 50e9            # bytes/s / link (per-device effective)
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float          # per device
+    hlo_bytes: float          # per device
+    coll_bytes: float         # per device link bytes
+    coll_op_bytes: float
+    model_flops: float        # whole-step useful flops (6ND / 2ND)
+    coll_by_kind: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    @property
+    def compute_s(self) -> float:
+        return self.hlo_flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hlo_bytes / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_ratio(self) -> float:
+        total = self.hlo_flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the compute roofline achieved if the step ran at
+        the dominant-term bound: (useful flops / chips / peak) / bound."""
+        if self.bound_s == 0:
+            return 0.0
+        return (self.model_flops / self.chips / PEAK_FLOPS) / self.bound_s
+
+    def row(self) -> Dict[str, object]:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "hlo_flops_per_dev": self.hlo_flops,
+            "hlo_bytes_per_dev": self.hlo_bytes,
+            "coll_bytes_per_dev": self.coll_bytes,
+            "coll_op_bytes_per_dev": self.coll_op_bytes,
+            "model_flops": self.model_flops,
+            "useful_ratio": self.useful_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "coll_by_kind": self.coll_by_kind,
+        }
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeConfig) -> float:
+    """6ND for training, 2ND per generated/processed token for inference."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        if cfg.family == "encdec":
+            tokens = shape.seq_len * shape.global_batch  # encoder dominates
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence in the batch
+    return 2.0 * n_active * shape.global_batch
+
+
+def make_roofline(cfg: ArchConfig, shape: ShapeConfig, mesh_name: str,
+                  chips: int, cost: Cost) -> Roofline:
+    return Roofline(
+        arch=cfg.name, shape=shape.name, mesh=mesh_name, chips=chips,
+        hlo_flops=cost.flops, hlo_bytes=cost.bytes,
+        coll_bytes=cost.coll_bytes, coll_op_bytes=cost.coll_op_bytes,
+        model_flops=model_flops(cfg, shape),
+        coll_by_kind=dict(cost.coll_by_kind),
+    )

@@ -1,0 +1,101 @@
+"""Per-op breakdown of a compiled cell — the §Perf profiling tool.
+
+Usage:
+  PYTHONPATH=src python -m repro.roofline.breakdown --arch mixtral_8x7b \
+      --shape prefill_32k [--metric bytes|flops|coll]
+"""
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+import argparse
+import collections
+import re
+
+from repro.roofline.hlo_cost import COLLECTIVES, HloCostModel, _TRIP_RE
+
+
+def breakdown(hlo_text: str, metric: str = "bytes", top: int = 20):
+    m = HloCostModel(hlo_text)
+    contrib = collections.Counter()
+
+    def walk(name, mult, path):
+        comp = m.computations.get(name, [])
+        for ins in comp:
+            if ins.op == "while":
+                mt = _TRIP_RE.search(ins.attrs)
+                trips = int(mt.group(1)) if mt else 1
+                for key in ("body", "condition"):
+                    c = m._called(ins, key)
+                    if c:
+                        walk(c, mult * trips, path + f"/while{trips}")
+                continue
+            if ins.op in ("call", "conditional"):
+                c = m._called(ins, "to_apply")
+                if c:
+                    walk(c, mult, path)
+            meta = re.search(r'op_name="([^"]*)"', ins.attrs)
+            label = meta.group(1)[-60:] if meta else ins.op
+            key = (ins.op, ins.shape[:44], label)
+            if metric == "flops":
+                if ins.op in ("dot", "convolution"):
+                    contrib[key] += m._dot_flops(comp, ins) * mult
+                elif ins.op == "fusion":
+                    called = m._called(ins, "calls")
+                    if called:
+                        contrib[key] += m.comp_cost(
+                            called, top_level=False).flops * mult
+            elif metric == "coll":
+                if any(ins.op.startswith(c) for c in COLLECTIVES):
+                    c = m.comp_cost.__self__ if False else None
+                    from repro.roofline.hlo_cost import _parse_shape
+                    opb = sum(_parse_shape(m._shape_of(comp, o))[0]
+                              for o in ins.operands)
+                    n = max(m._group_size(ins), 1)
+                    contrib[key] += opb * (2 * (n - 1) / n) * mult
+            else:
+                if ins.op not in ("parameter", "constant", "tuple",
+                                  "get-tuple-element", "bitcast", "after-all",
+                                  "iota", "partition-id", "replica-id"):
+                    contrib[key] += m._traffic(comp, ins) * mult
+
+    walk(m.entry, 1.0, "")
+    total = sum(contrib.values()) or 1.0
+    lines = [f"total {metric}: {total:.4e}"]
+    for (op, shp, label), v in contrib.most_common(top):
+        lines.append(f"{v:12.4e} {v / total * 100:5.1f}%  {op:22s} "
+                     f"{shp:44s} {label}")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--metric", default="bytes",
+                    choices=["bytes", "flops", "coll"])
+    ap.add_argument("--top", type=int, default=20)
+    args = ap.parse_args()
+
+    from repro.configs.base import SHAPES, get_config
+    from repro.launch.dryrun import (_decode_artifacts, _prefill_artifacts,
+                                     _train_artifacts)
+    from repro.launch.mesh import make_production_mesh
+    from repro.sharding import rules as R
+
+    cfg = get_config(args.arch)
+    shape = SHAPES[args.shape]
+    mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+    rules = R.Rules(mesh)
+    build = {"train": _train_artifacts, "prefill": _prefill_artifacts,
+             "decode": _decode_artifacts}[shape.kind]
+    with mesh:
+        step, sds = build(cfg, shape, rules)
+        with R.use_rules(rules):
+            compiled = step.lower(*sds).compile()
+    print(breakdown(compiled.as_text(), args.metric, args.top))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,374 @@
+"""HLO-text cost walker for roofline analysis.
+
+``compiled.cost_analysis()`` counts while-loop bodies ONCE regardless of
+trip count (verified empirically — see DESIGN.md §8), which would make a
+scan-over-layers model look 40x cheaper than it is. This walker parses
+``compiled.as_text()`` and computes, per computation and multiplied
+through ``known_trip_count`` of enclosing whiles:
+
+  * flops        — dot/convolution FLOPs from operand/output shapes
+  * bytes        — HBM traffic: operand+output bytes of every top-level
+                   instruction (fusion boundaries = materialized buffers)
+  * coll_bytes   — per-device link bytes of collectives with the standard
+                   ring-algorithm factors (all-reduce 2(N-1)/N, all-gather
+                   (N-1), reduce-scatter (N-1)/N, all-to-all (N-1)/N,
+                   collective-permute 1), N = replica-group size
+  * coll_op_bytes— the raw "sum of collective operand sizes" per the
+                   EXPERIMENTS.md spec formula (recorded alongside)
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "s4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "u4": 1,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_op_bytes: float = 0.0
+    coll_by_kind: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def __iadd__(self, other: "Cost"):
+        self.flops += other.flops
+        self.bytes += other.bytes
+        self.coll_bytes += other.coll_bytes
+        self.coll_op_bytes += other.coll_op_bytes
+        for k, v in other.coll_by_kind.items():
+            self.coll_by_kind[k] = self.coll_by_kind.get(k, 0.0) + v
+        return self
+
+    def scaled(self, m: float) -> "Cost":
+        return Cost(self.flops * m, self.bytes * m, self.coll_bytes * m,
+                    self.coll_op_bytes * m,
+                    {k: v * m for k, v in self.coll_by_kind.items()})
+
+
+def _parse_shape(s: str) -> Tuple[float, List[int]]:
+    """'f32[64,512]{1,0}' -> (bytes, dims). Tuples sum their elements."""
+    s = s.strip()
+    if s.startswith("("):
+        total = 0.0
+        for part in _split_tuple(s[1:-1]):
+            b, _ = _parse_shape(part)
+            total += b
+        return total, []
+    m = re.match(r"([a-z0-9]+)\[([\d,]*)\]", s)
+    if not m:
+        return 0.0, []
+    dtype, dims_s = m.group(1), m.group(2)
+    dims = [int(x) for x in dims_s.split(",")] if dims_s else []
+    n = 1
+    for d in dims:
+        n *= d
+    return float(n * _DTYPE_BYTES.get(dtype, 4)), dims
+
+
+def _split_tuple(s: str) -> List[str]:
+    parts, depth, cur = [], 0, []
+    for ch in s:
+        if ch in "({[":
+            depth += 1
+        elif ch in ")}]":
+            depth -= 1
+        if ch == "," and depth == 0:
+            parts.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        parts.append("".join(cur))
+    return parts
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    shape: str
+    op: str
+    operands: List[str]
+    attrs: str
+    out_bytes: float = 0.0
+    inner: str = ""
+
+
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\((.*?)\)\s*->\s*(.*?)\s*{\s*$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+def _parse_instr(line: str) -> Optional[Instr]:
+    line = line.strip()
+    m = re.match(r"(ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*)$", line)
+    if not m:
+        return None
+    name, rest = m.group(2), m.group(3)
+    # type: tuple or primitive (no spaces in primitive type)
+    if rest.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rest):
+            depth += ch == "("
+            depth -= ch == ")"
+            if depth == 0:
+                break
+        shape, rest2 = rest[:i + 1], rest[i + 1:].strip()
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        shape, rest2 = rest[:sp], rest[sp + 1:]
+    m2 = re.match(r"([\w\-]+)\(", rest2)
+    if not m2:
+        return None
+    op = m2.group(1)
+    # operand list = first balanced parens
+    start = rest2.find("(")
+    depth, i = 0, start
+    for i in range(start, len(rest2)):
+        depth += rest2[i] == "("
+        depth -= rest2[i] == ")"
+        if depth == 0:
+            break
+    inner = rest2[start + 1:i]
+    attrs = rest2[i + 1:]
+    operands = re.findall(r"%([\w\.\-]+)", inner)
+    out_bytes, _ = _parse_shape(shape)
+    return Instr(name, shape, op, operands, attrs, out_bytes, inner)
+
+
+_SKIP_TRAFFIC_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "iota", "partition-id", "replica-id",
+}
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str):
+        self.computations: Dict[str, List[Instr]] = {}
+        self.entry: Optional[str] = None
+        self._parse(hlo_text)
+        self._memo: Dict[str, Cost] = {}
+
+    def _parse(self, text: str) -> None:
+        cur: Optional[str] = None
+        for line in text.splitlines():
+            mc = _COMP_RE.match(line)
+            if mc:
+                cur = mc.group(2)
+                self.computations[cur] = []
+                if mc.group(1):
+                    self.entry = cur
+                continue
+            if line.strip() == "}":
+                cur = None
+                continue
+            if cur is not None and "=" in line:
+                ins = _parse_instr(line)
+                if ins:
+                    self.computations[cur].append(ins)
+
+    # -- helpers -------------------------------------------------------------
+    def _shape_of(self, comp: List[Instr], name: str) -> str:
+        for ins in comp:
+            if ins.name == name:
+                return ins.shape
+        return ""
+
+    def _called(self, ins: Instr, key: str) -> Optional[str]:
+        m = re.search(key + r"=%?([\w\.\-]+)", ins.attrs)
+        return m.group(1) if m else None
+
+    def _group_size(self, ins: Instr) -> int:
+        m = _GROUPS_IOTA_RE.search(ins.attrs)
+        if m:
+            total, _ = int(m.group(1)) * int(m.group(2)), 0
+            # iota format [g,k]<=[...]: groups of the *last* dim size k
+            return int(m.group(2))
+        m = _GROUPS_LIST_RE.search(ins.attrs)
+        if m:
+            return len(m.group(1).split(","))
+        return 1
+
+    def _dot_flops(self, comp: List[Instr], ins: Instr) -> float:
+        out_bytes, out_dims = _parse_shape(ins.shape)
+        if not ins.operands:
+            return 0.0
+        lhs_shape = self._shape_of(comp, ins.operands[0])
+        _, lhs_dims = _parse_shape(lhs_shape)
+        mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.attrs)
+        contracted = 1
+        if mc and lhs_dims:
+            for d in (mc.group(1).split(",") if mc.group(1) else []):
+                contracted *= lhs_dims[int(d)]
+        out_elems = 1
+        for d in out_dims:
+            out_elems *= d
+        return 2.0 * out_elems * contracted
+
+    # -- HBM traffic model -----------------------------------------------------
+    #
+    # In-place ops touch only the updated region, not the whole aliased
+    # buffer (XLA aliases DUS/scatter outputs): counting full buffers would
+    # inflate scan-carrying models (rwkv, blocked attention) ~1000x.
+    def _traffic(self, comp: List[Instr], ins: Instr) -> float:
+        op = ins.op
+        if op == "dynamic-update-slice":
+            upd = (_parse_shape(self._shape_of(comp, ins.operands[1]))[0]
+                   if len(ins.operands) > 1 else ins.out_bytes)
+            return 2.0 * upd
+        if op == "dynamic-slice":
+            return 2.0 * ins.out_bytes
+        if op == "gather":
+            idx = (_parse_shape(self._shape_of(comp, ins.operands[1]))[0]
+                   if len(ins.operands) > 1 else 0.0)
+            return 2.0 * ins.out_bytes + idx
+        if op == "scatter":
+            upd = (_parse_shape(self._shape_of(comp, ins.operands[-1]))[0]
+                   if ins.operands else 0.0)
+            return 2.0 * upd + ins.out_bytes * 0.0 + upd  # rmw of region
+        if op == "broadcast":
+            return ins.out_bytes
+        if op == "fusion":
+            return self._fusion_traffic(comp, ins)
+        operand_bytes = sum(_parse_shape(self._shape_of(comp, o))[0]
+                            for o in set(ins.operands))
+        return operand_bytes + ins.out_bytes
+
+    def _fusion_traffic(self, comp: List[Instr], ins: Instr) -> float:
+        """Fusion traffic = params + outputs, with two aliasing fixes:
+
+        * DUS roots: only the updated slice is read+written; the aliased
+          full-size operand/output pair is skipped.
+        * Parameters consumed *only* by dynamic-slice inside the fusion
+          (stacked scan inputs) contribute the slice bytes, not the full
+          stacked buffer.
+        """
+        called_name = self._called(ins, "calls")
+        called = self.computations.get(called_name, []) if called_name else []
+        if not called:
+            operand_bytes = sum(_parse_shape(self._shape_of(comp, o))[0]
+                                for o in set(ins.operands))
+            return operand_bytes + ins.out_bytes
+        # effective read size per parameter index: a param consumed only
+        # by dynamic-slice contributes the slice bytes, not the buffer.
+        by_index: Dict[int, float] = {}
+        for p in called:
+            if p.op != "parameter":
+                continue
+            try:
+                idx = int(p.inner.strip())
+            except ValueError:
+                continue
+            consumers = [c for c in called if p.name in c.operands]
+            full, _ = _parse_shape(p.shape)
+            if consumers and all(c.op == "dynamic-slice" for c in consumers):
+                by_index[idx] = sum(c.out_bytes for c in consumers)
+            else:
+                by_index[idx] = full
+        seen = set()
+        operand_bytes = 0.0
+        for pos, opnd in enumerate(ins.operands):
+            if opnd in seen:
+                continue
+            seen.add(opnd)
+            if pos in by_index:
+                operand_bytes += by_index[pos]
+            else:
+                operand_bytes += _parse_shape(self._shape_of(comp, opnd))[0]
+        total = operand_bytes + ins.out_bytes
+        root = called[-1]
+        dus_list = []
+        if root.op == "dynamic-update-slice":
+            dus_list = [root]
+        elif root.op == "tuple":
+            names = set(root.operands)
+            dus_list = [i for i in called
+                        if i.name in names and i.op == "dynamic-update-slice"]
+        for dus in dus_list:
+            buf_bytes, _ = _parse_shape(dus.shape)
+            upd_name = dus.operands[1] if len(dus.operands) > 1 else None
+            upd_bytes = (_parse_shape(
+                self._shape_of(called, upd_name))[0] if upd_name else 0.0)
+            # remove aliased full buffer from both sides, add slice RMW
+            total -= 2.0 * buf_bytes
+            total += 2.0 * upd_bytes
+        return max(total, 0.0)
+
+    # -- recursive cost -------------------------------------------------------
+    def comp_cost(self, name: str, *, top_level: bool = True) -> Cost:
+        key = f"{name}|{top_level}"
+        if key in self._memo:
+            return self._memo[key]
+        cost = Cost()
+        comp = self.computations.get(name, [])
+        for ins in comp:
+            op = ins.op
+            if op == "while":
+                body = self._called(ins, "body")
+                cond = self._called(ins, "condition")
+                mt = _TRIP_RE.search(ins.attrs)
+                trips = int(mt.group(1)) if mt else 1
+                inner = Cost()
+                if body:
+                    inner += self.comp_cost(body, top_level=True)
+                if cond:
+                    inner += self.comp_cost(cond, top_level=True)
+                cost += inner.scaled(trips)
+                continue
+            if op in ("call", "conditional", "async-start"):
+                for k in ("to_apply", "true_computation", "false_computation",
+                          "called_computation"):
+                    c = self._called(ins, k)
+                    if c:
+                        cost += self.comp_cost(c, top_level=top_level)
+            if op == "fusion":
+                called = self._called(ins, "calls")
+                if called:
+                    sub = self.comp_cost(called, top_level=False)
+                    cost.flops += sub.flops      # dots inside fusions
+            if op in ("dot", "convolution"):
+                cost.flops += self._dot_flops(comp, ins)
+            if any(op.startswith(c) for c in COLLECTIVES):
+                opb = sum(_parse_shape(self._shape_of(comp, o))[0]
+                          for o in ins.operands)
+                n = max(self._group_size(ins), 1)
+                kind = next(c for c in COLLECTIVES if op.startswith(c))
+                if kind == "all-reduce":
+                    link = 2.0 * (n - 1) / n * opb
+                elif kind == "all-gather":
+                    link = (n - 1) * opb
+                elif kind == "reduce-scatter":
+                    link = (n - 1) / n * opb
+                elif kind == "all-to-all":
+                    link = (n - 1) / n * opb
+                else:  # collective-permute
+                    link = opb
+                cost.coll_bytes += link
+                cost.coll_op_bytes += opb
+                cost.coll_by_kind[kind] = cost.coll_by_kind.get(kind, 0.0) + link
+            if top_level and op not in _SKIP_TRAFFIC_OPS:
+                cost.bytes += self._traffic(comp, ins)
+        self._memo[key] = cost
+        return cost
+
+    def total(self) -> Cost:
+        if self.entry is None:
+            return Cost()
+        return self.comp_cost(self.entry)
+
+
+def analyze_text(hlo_text: str) -> Cost:
+    return HloCostModel(hlo_text).total()

@@ -1,0 +1,94 @@
+"""Render the dry-run / roofline results into markdown tables.
+
+Usage: PYTHONPATH=src python -m repro.roofline.report [results_dir]
+Writes markdown to stdout (EXPERIMENTS.md embeds the output).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+
+def load(results_dir: str):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        rows.append(json.load(open(f)))
+    return rows
+
+
+def fmt_bytes(b):
+    return f"{b / 1e9:.2f}"
+
+
+def _next_action(r):
+    """One sentence: what would move the dominant term down."""
+    dom = r.get("dominant")
+    shape = r["shape"]
+    if dom == "memory":
+        if shape == "train_4k":
+            return ("fuse the softmax/mask chain & avoid S^2 logit "
+                    "materialization (blocked/Pallas attention)")
+        if shape.startswith("prefill"):
+            return "larger attention blocks + bf16 accum to cut block traffic"
+        return "8-bit KV cache (halves decode reads); fuse dequant into dot"
+    if dom == "collective":
+        return ("overlap TP all-reduce with per-shard matmul; "
+                "reduce-scatter instead of all-reduce for ZeRO grads")
+    return "increase arithmetic intensity (larger per-step tiles)"
+
+
+def dryrun_table(rows):
+    out = ["| arch | shape | mesh | status | GB/dev | fits 16GB | compile_s |",
+           "|---|---|---|---|---|---|---|"]
+    for r in rows:
+        mem = r.get("memory", {})
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['status']} | "
+            f"{fmt_bytes(mem.get('per_device_bytes', 0)) if mem else '-'} | "
+            f"{mem.get('fits_16gb', '-') if mem else '-'} | "
+            f"{r.get('compile_s', 0):.1f} |")
+    return "\n".join(out)
+
+
+def roofline_table(rows, mesh="single"):
+    out = ["| arch | shape | compute_s | memory_s | collective_s | dominant "
+           "| MODEL_FLOPS | useful ratio | roofline frac | next action |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["mesh"] != mesh or r["status"] != "ok":
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4f} | "
+            f"{r['memory_s']:.3f} | {r['collective_s']:.4f} | "
+            f"{r['dominant']} | {r['model_flops']:.3e} | "
+            f"{r['useful_ratio']:.3f} | {r['roofline_fraction']:.5f} | "
+            f"{_next_action(r)} |")
+    return "\n".join(out)
+
+
+def skipped_table(rows):
+    out = ["| arch | shape | reason |", "|---|---|---|"]
+    for r in rows:
+        if r["status"] == "skipped" and r["mesh"] == "single":
+            out.append(f"| {r['arch']} | {r['shape']} | {r.get('reason')} |")
+    return "\n".join(out)
+
+
+def main():
+    d = sys.argv[1] if len(sys.argv) > 1 else os.path.join(
+        os.path.dirname(__file__), "..", "..", "..", "roofline_results")
+    rows = load(d)
+    print("## Dry-run (all cells, both meshes)\n")
+    print(dryrun_table(rows))
+    print("\n## Roofline (single-pod 16x16, per step)\n")
+    print(roofline_table(rows, "single"))
+    print("\n## Roofline (multi-pod 2x16x16)\n")
+    print(roofline_table(rows, "multi"))
+    print("\n## Skipped cells\n")
+    print(skipped_table(rows))
+
+
+if __name__ == "__main__":
+    main()

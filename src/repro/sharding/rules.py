@@ -1,0 +1,182 @@
+"""Logical-axis sharding rules with divisibility fallback (MaxText-style).
+
+Models annotate parameters and activations with *logical* axis names; the
+active :class:`Rules` object maps them to mesh axes, dropping any mapping
+whose dimension is not divisible by the mesh-axis size (e.g. qwen2-0.5b's
+14 heads on a 16-way model axis fall back to replicated attention while
+its FFN still shards). This keeps every (arch x shape x mesh) cell
+compilable without per-arch hand-tuning — see DESIGN.md §5.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import math
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+# logical axis -> preferred mesh axes (joined). Tuples shard over the
+# product of the listed mesh axes (those present in the mesh).
+DEFAULT_RULES = {
+    "batch": ("pod", "data"),
+    "seq": (),                # sequence replicated by default (SP opt-in)
+    "seq_shard": ("data",),   # opt-in sequence parallelism
+    "embed": (),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": (),
+    "ff": ("model",),
+    "vocab": ("model",),
+    "experts": ("data",),
+    "expert_ff": ("model",),
+    "layers": (),
+    "conv": (),
+    "stats": (),
+}
+
+
+class Rules:
+    def __init__(self, mesh: Mesh, table: Optional[dict] = None):
+        self.mesh = mesh
+        self.table = dict(DEFAULT_RULES)
+        if table:
+            self.table.update(table)
+        self.axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def _mesh_axes(self, logical: Optional[str]) -> Tuple[str, ...]:
+        if logical is None:
+            return ()
+        pref = self.table.get(logical, ())
+        return tuple(a for a in pref if a in self.axis_sizes)
+
+    def dim_spec(self, logical: Optional[str], size: Optional[int]):
+        """Mesh axes for one dim, honoring divisibility of ``size``."""
+        axes = self._mesh_axes(logical)
+        if not axes:
+            return None
+        if size is not None:
+            total = math.prod(self.axis_sizes[a] for a in axes)
+            if size % total != 0:
+                # try a prefix of the axes (e.g. batch=32 on pod*data=32 ok,
+                # batch=1 -> replicate)
+                while axes:
+                    axes = axes[:-1]
+                    total = math.prod(self.axis_sizes[a] for a in axes)
+                    if axes and size % total == 0:
+                        break
+                if not axes:
+                    return None
+        return axes if len(axes) > 1 else axes[0]
+
+    def spec(self, logical_axes: Sequence[Optional[str]],
+             shape: Optional[Sequence[int]] = None) -> P:
+        dims = []
+        for i, ax in enumerate(logical_axes):
+            size = None if shape is None else shape[i]
+            dims.append(self.dim_spec(ax, size))
+        return P(*dims)
+
+    def sharding(self, logical_axes, shape=None) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(logical_axes, shape))
+
+
+# FSDP: activations batch-shard over the whole mesh; no tensor parallelism.
+FSDP_RULES = {
+    "batch": ("pod", "data", "model"),
+    "seq": (), "embed": (), "heads": (), "kv_heads": (), "head_dim": (),
+    "ff": (), "vocab": (), "experts": ("data",), "expert_ff": (),
+    "layers": (), "conv": (), "stats": (),
+}
+
+
+def fsdp_param_spec(shape, rules: "Rules") -> P:
+    """Shard the largest divisible dim over the full (data, model) mesh
+    product (falling back to 'data' alone) — ZeRO-3 parameter layout;
+    XLA SPMD inserts the per-layer all-gathers and gradient
+    reduce-scatters."""
+    for axes in (("data", "model"), ("data",), ("model",)):
+        if not all(a in rules.axis_sizes for a in axes):
+            continue
+        n = math.prod(rules.axis_sizes[a] for a in axes)
+        best, best_size = None, 0
+        for i, dim in enumerate(shape):
+            if dim % n == 0 and dim > best_size:
+                best, best_size = i, dim
+        if best is not None:
+            dims = [None] * len(shape)
+            dims[best] = axes if len(axes) > 1 else axes[0]
+            return P(*dims)
+    return P(*([None] * len(shape)))
+
+
+def make_rules_for(cfg, mesh) -> "Rules":
+    """Strategy-aware rules factory (cfg.sharding_strategy)."""
+    table = FSDP_RULES if getattr(cfg, "sharding_strategy", "tp") == "fsdp"         else None
+    return Rules(mesh, table)
+
+
+_ACTIVE: contextvars.ContextVar[Optional[Rules]] = contextvars.ContextVar(
+    "active_rules", default=None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[Rules]):
+    tok = _ACTIVE.set(rules)
+    try:
+        yield rules
+    finally:
+        _ACTIVE.reset(tok)
+
+
+def active_rules() -> Optional[Rules]:
+    return _ACTIVE.get()
+
+
+def constrain(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
+    """Apply with_sharding_constraint if rules are active (no-op otherwise)."""
+    rules = _ACTIVE.get()
+    if rules is None:
+        return x
+    spec = rules.spec(logical_axes, x.shape)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, spec))
+
+
+def param_specs(axes_tree, shapes_tree, rules: Rules):
+    """Map a tree of logical-axes tuples + shapes to PartitionSpecs."""
+    return jax.tree.map(
+        lambda axes, shape: rules.spec(axes, shape),
+        axes_tree, shapes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x),
+    )
+
+
+def zero1_spec(spec: P, shape, rules: Rules, axis: str = "data") -> P:
+    """ZeRO-1: additionally shard the largest unsharded dim over ``axis``.
+
+    Applied to optimizer moments and the fp32 master copy so that
+    optimizer memory scales down with the data axis.
+    """
+    if axis not in rules.axis_sizes:
+        return spec
+    n = rules.axis_sizes[axis]
+    dims = list(spec) + [None] * (len(shape) - len(spec))
+    used = set()
+    for d in dims:
+        for a in (d if isinstance(d, tuple) else (d,)):
+            if a:
+                used.add(a)
+    if axis in used:
+        return spec
+    best, best_size = None, 0
+    for i, d in enumerate(dims):
+        if d is None and shape[i] % n == 0 and shape[i] > best_size:
+            best, best_size = i, shape[i]
+    if best is None:
+        return spec
+    dims[best] = axis
+    return P(*dims)

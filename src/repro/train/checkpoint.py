@@ -1,0 +1,126 @@
+"""Fault-tolerant checkpointing: atomic npz snapshots + resharding restore.
+
+* Atomic: write to ``<dir>/tmp-<step>``, fsync, rename to ``step-<n>``,
+  then update ``LATEST`` — a crash mid-save never corrupts the last good
+  checkpoint (test: tests/test_checkpoint.py::test_crash_mid_save).
+* Resharding restore: arrays are loaded on host and ``device_put`` with the
+  *target* shardings, so a checkpoint written on one mesh restores onto a
+  different mesh (elastic re-size — ZeRO/FSDP state included).
+* Async: ``save_async`` snapshots to host memory synchronously (cheap) and
+  writes in a background thread, overlapping I/O with the next train step.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Tuple[dict, Any]:
+    leaves, treedef = jax.tree.flatten(tree)
+    return {f"leaf_{i}": np.asarray(x) for i, x in enumerate(leaves)}, treedef
+
+
+def save(ckpt_dir: str, step: int, tree: Any, *, keep: int = 3) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    arrays, _ = _flatten(tree)
+    tmp = os.path.join(ckpt_dir, f"tmp-{step}")
+    final = os.path.join(ckpt_dir, f"step-{step}")
+    os.makedirs(tmp, exist_ok=True)
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump({"step": step, "n_leaves": len(arrays)}, f)
+    for name in os.listdir(tmp):
+        fd = os.open(os.path.join(tmp, name), os.O_RDONLY)
+        os.fsync(fd)
+        os.close(fd)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    with open(os.path.join(ckpt_dir, "LATEST.tmp"), "w") as f:
+        f.write(str(step))
+    os.replace(os.path.join(ckpt_dir, "LATEST.tmp"),
+               os.path.join(ckpt_dir, "LATEST"))
+    _gc(ckpt_dir, keep)
+    return final
+
+
+def _gc(ckpt_dir: str, keep: int) -> None:
+    steps = sorted(int(d.split("-")[1]) for d in os.listdir(ckpt_dir)
+                   if d.startswith("step-"))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step-{s}"),
+                      ignore_errors=True)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    path = os.path.join(ckpt_dir, "LATEST")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return int(f.read().strip())
+
+
+def restore(ckpt_dir: str, template: Any, *, step: Optional[int] = None,
+            shardings: Any = None) -> Tuple[int, Any]:
+    """Restore onto ``template``'s structure; reshard if shardings given.
+
+    ``template`` may be arrays or ShapeDtypeStructs; ``shardings`` (a
+    matching tree of NamedSharding or None) controls target placement —
+    pass the *current* mesh's shardings to restore elastically.
+    """
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step-{step}")
+    data = np.load(os.path.join(path, "arrays.npz"))
+    leaves, treedef = jax.tree.flatten(template)
+    if len(data.files) != len(leaves):
+        raise ValueError(f"checkpoint has {len(data.files)} leaves, "
+                         f"template has {len(leaves)}")
+    new_leaves = [data[f"leaf_{i}"] for i in range(len(leaves))]
+    for i, (a, t) in enumerate(zip(new_leaves, leaves)):
+        if tuple(a.shape) != tuple(t.shape):
+            raise ValueError(f"leaf {i}: shape {a.shape} != {t.shape}")
+    if shardings is not None:
+        flat_sh = treedef.flatten_up_to(shardings)
+        new_leaves = [jax.device_put(a, s) if s is not None else a
+                      for a, s in zip(new_leaves, flat_sh)]
+    return step, treedef.unflatten(new_leaves)
+
+
+class AsyncSaver:
+    """Overlaps checkpoint I/O with training (one in-flight save)."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self.last_error: Optional[BaseException] = None
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self.last_error is not None:
+            err, self.last_error = self.last_error, None
+            raise err
+
+    def save(self, step: int, tree: Any) -> None:
+        self.wait()
+        host_tree = jax.tree.map(np.asarray, tree)   # snapshot now
+
+        def _write():
+            try:
+                save(self.ckpt_dir, step, host_tree, keep=self.keep)
+            except BaseException as e:  # surfaced on next wait()
+                self.last_error = e
+
+        self._thread = threading.Thread(target=_write, daemon=True)
+        self._thread.start()

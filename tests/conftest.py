@@ -1,0 +1,10 @@
+# NOTE: no XLA_FLAGS here on purpose — unit tests and benches must see the
+# real single CPU device. Mesh-dependent tests spawn subprocesses with
+# --xla_force_host_platform_device_count set (see tests/_mesh_helpers.py).
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

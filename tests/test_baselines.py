@@ -1,0 +1,53 @@
+"""Softermax / I-BERT baseline correctness (the designs SOLE compares to)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.baselines.ibert import i_exp, i_layernorm, i_softmax, i_sqrt
+from repro.core.baselines.softermax import softermax
+
+
+def test_softermax_matches_exact_closely(rng):
+    x = jnp.asarray(rng.normal(0, 3, (16, 512)).astype(np.float32))
+    ref = jax.nn.softmax(x, -1)
+    out = softermax(x)
+    assert float(jnp.mean(jnp.abs(out - ref))) < 1e-4
+    np.testing.assert_allclose(np.asarray(jnp.sum(out, -1)), 1.0, rtol=1e-5)
+
+
+def test_i_exp_accuracy():
+    scale = 1 / 64
+    q = jnp.arange(-640, 1)
+    out, out_scale = i_exp(q, scale)
+    approx = np.asarray(out, np.float64) * out_scale
+    exact = np.exp(np.arange(-640, 1) * scale)
+    assert np.max(np.abs(approx - exact)) < 0.01
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(0, 2**30))
+def test_i_sqrt_is_floor_sqrt(n):
+    got = int(i_sqrt(jnp.asarray(n, jnp.int32), iters=25))
+    exact = int(np.floor(np.sqrt(n)))
+    assert abs(got - exact) <= 1
+
+
+def test_i_layernorm_close(rng):
+    h = jnp.asarray(rng.normal(0, 2, (8, 768)).astype(np.float32))
+    g = jnp.ones(768, jnp.float32)
+    b = jnp.zeros(768, jnp.float32)
+    mu = jnp.mean(h, -1, keepdims=True)
+    ref = (h - mu) * jax.lax.rsqrt(jnp.var(h, -1, keepdims=True) + 1e-5)
+    out = i_layernorm(h, g, b)
+    rel = float(jnp.sqrt(jnp.mean((out - ref) ** 2))
+                / jnp.sqrt(jnp.mean(ref ** 2)))
+    assert rel < 0.05
+
+
+def test_i_softmax_8bit_output_grid(rng):
+    x = jnp.asarray(rng.normal(0, 2, (4, 64)).astype(np.float32))
+    out = np.asarray(i_softmax(x, out_bits=8))
+    # outputs quantized to 1/256 grid
+    np.testing.assert_allclose(out * 256, np.round(out * 256), atol=1e-4)

@@ -1,0 +1,73 @@
+"""Data pipeline: determinism, sharding, resume semantics."""
+import numpy as np
+
+from repro.configs.base import ShapeConfig, get_config
+from repro.data.pipeline import SyntheticLM, make_batch
+
+
+def _cfg():
+    return get_config("qwen2_0_5b").smoke()
+
+
+def test_batches_deterministic():
+    p = SyntheticLM(_cfg(), seq_len=32, batch=8, seed=7)
+    a = p.batch_at(3)
+    b = p.batch_at(3)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+
+
+def test_different_steps_differ():
+    p = SyntheticLM(_cfg(), seq_len=32, batch=8, seed=7)
+    a, b = p.batch_at(1), p.batch_at(2)
+    assert not np.array_equal(a["tokens"], b["tokens"])
+
+
+def test_shards_disjoint_and_deterministic():
+    p = SyntheticLM(_cfg(), seq_len=32, batch=8, seed=7)
+    s0 = p.batch_at(5, shard=0, num_shards=4)
+    s1 = p.batch_at(5, shard=1, num_shards=4)
+    assert s0["tokens"].shape == (2, 32)
+    assert not np.array_equal(s0["tokens"], s1["tokens"])
+    np.testing.assert_array_equal(
+        s0["tokens"], p.batch_at(5, shard=0, num_shards=4)["tokens"])
+
+
+def test_targets_are_shifted_tokens():
+    p = SyntheticLM(_cfg(), seq_len=32, batch=4, seed=0)
+    b = p.batch_at(0)
+    # consecutive positions share the underlying sequence
+    assert b["tokens"].shape == b["targets"].shape
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["targets"][:, :-1])
+
+
+def test_learnable_structure():
+    """Next token is (a*t + b) % V most of the time — verify the affine
+    relation holds for > 90% of adjacent pairs (2% noise injected)."""
+    cfg = _cfg()
+    p = SyntheticLM(cfg, seq_len=128, batch=4, seed=3)
+    b = p.batch_at(0)
+    ok = 0
+    total = 0
+    for row_t, row_y in zip(b["tokens"], b["targets"]):
+        # recover (a, off) from two clean consecutive steps, then check rest
+        found = False
+        v = cfg.vocab_size
+        for a_cand in range(3, 129, 2):
+            off = (int(row_y[0]) - a_cand * int(row_t[0])) % v
+            pred = (a_cand * row_t + off) % v
+            match = np.mean(pred == row_y)
+            if match > 0.9:
+                found = True
+                ok += 1
+                break
+        total += 1
+    assert ok >= total // 2
+
+
+def test_make_batch_families():
+    shape = ShapeConfig("t", 32, 4, "train")
+    enc = make_batch(get_config("whisper_small").smoke(), shape, 0)
+    assert enc["frames"].shape[1] == 32 and enc["tokens"].shape[1] == 32
+    vlm = make_batch(get_config("qwen2_vl_7b").smoke(), shape, 0)
+    assert vlm["embeds"].shape == (4, 32, 64)
+    assert vlm["positions"].shape == (3, 4, 32)

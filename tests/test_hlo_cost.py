@@ -1,0 +1,80 @@
+"""HLO walker correctness on synthetic programs (subprocess: needs mesh)."""
+import pytest
+
+from tests._mesh_helpers import run_with_devices
+
+pytestmark = pytest.mark.slow
+
+
+def test_scan_flops_multiplied_and_collectives_counted():
+    out = run_with_devices("""
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P, NamedSharding
+from repro.roofline.hlo_cost import analyze_text
+
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+def body(carry, _):
+    x, w = carry
+    return (jax.nn.relu(jnp.dot(x, w)), w), None
+def f(x, w):
+    (y, _), _ = jax.lax.scan(body, (x, w), None, length=7)
+    return jnp.sum(y)
+x = jax.ShapeDtypeStruct((128, 512), jnp.float32)
+w = jax.ShapeDtypeStruct((512, 512), jnp.float32)
+with mesh:
+    c = jax.jit(f, in_shardings=(NamedSharding(mesh, P("data", None)),
+                                 NamedSharding(mesh, P(None, "model")))
+                ).lower(x, w).compile()
+cost = analyze_text(c.as_text())
+exp_flops = 7 * 2 * 64 * 512 * 128           # per-device, x trip count
+assert abs(cost.flops - exp_flops) / exp_flops < 1e-6, cost.flops
+exp_ag = 7 * 3 * 64 * 128 * 4                 # ring all-gather link bytes
+ag = cost.coll_by_kind.get("all-gather", 0)
+assert abs(ag - exp_ag) / exp_ag < 1e-6, ag
+print("PASS")
+""")
+    assert "PASS" in out
+
+
+def test_scan_state_traffic_not_inflated():
+    """DUS into a stacked buffer must count the slice, not the buffer."""
+    out = run_with_devices("""
+import jax, jax.numpy as jnp
+from repro.roofline.hlo_cost import analyze_text
+
+def f(x):
+    def body(c, _):
+        return c * 1.5 + 1.0, c
+    _, ys = jax.lax.scan(body, x, None, length=1000)
+    return ys
+
+x = jax.ShapeDtypeStruct((128,), jnp.float32)
+c = jax.jit(f).lower(x).compile()
+cost = analyze_text(c.as_text())
+# per step: read/write the 512-byte carry + write one 512-byte slice:
+# a few KB -> total well under 10 MB. Naive full-buffer counting would
+# give 1000 steps x 512 KB = 0.5 GB.
+assert cost.bytes < 2e7, cost.bytes
+print("PASS", cost.bytes)
+""")
+    assert "PASS" in out
+
+
+def test_dtype_and_tuple_shape_parsing():
+    from repro.roofline.hlo_cost import _parse_shape
+    assert _parse_shape("bf16[8,4096,4096]{2,1,0}")[0] == 8 * 4096 * 4096 * 2
+    assert _parse_shape("pred[16]")[0] == 16
+    b, _ = _parse_shape("(f32[2,3]{1,0}, s32[4])")
+    assert b == 2 * 3 * 4 + 4 * 4
+    assert _parse_shape("token[]")[0] == 0
+
+
+def test_group_size_parsing():
+    from repro.roofline.hlo_cost import HloCostModel, Instr
+    m = HloCostModel("")
+    ins = Instr("x", "f32[4]", "all-reduce", ["y"],
+                "replica_groups=[2,4]<=[8], channel_id=1")
+    assert m._group_size(ins) == 4
+    ins2 = Instr("x", "f32[4]", "all-reduce", ["y"],
+                 "replica_groups={{0,1,2},{3,4,5}}")
+    assert m._group_size(ins2) == 3

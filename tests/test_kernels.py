@@ -1,0 +1,100 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret=True)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.sole.quant import calibrate_ptf
+from repro.kernels import ref as K
+from repro.kernels.ops import (ailayernorm_op, e2softmax_op,
+                               flash_attention_op)
+
+
+@pytest.mark.parametrize("shape", [(4, 64), (3, 5, 130), (1, 1000), (7, 257)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("exp_bits", [4, 6])
+def test_e2softmax_kernel_matches_ref(rng, shape, dtype, exp_bits):
+    x = jnp.asarray(rng.normal(0, 3, shape)).astype(dtype)
+    out = e2softmax_op(x, exp_bits=exp_bits)
+    ref = K.e2softmax_ref(x, exp_bits=exp_bits)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-6, atol=1e-7)
+
+
+@pytest.mark.parametrize("shape", [(8, 64), (2, 12, 256), (5, 896)])
+def test_ailayernorm_kernel_matches_ref(rng, shape):
+    c = shape[-1]
+    x = jnp.asarray(rng.normal(0.5, 2, shape).astype(np.float32))
+    g = jnp.asarray(rng.normal(1, 0.1, c).astype(np.float32))
+    b = jnp.asarray(rng.normal(0, 0.1, c).astype(np.float32))
+    p = calibrate_ptf(x, unsigned=True)
+    out = ailayernorm_op(x, g, b, params=p)
+    xi = p.quantize(x) - p.zero_point
+    ref = K.ailayernorm_ref(xi, p.alpha, g, b)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_exact_mode_matches_softmax(rng, causal, dtype):
+    B, S, H, hd = 2, 80, 2, 32
+    q, k, v = (jnp.asarray(rng.normal(0, 1, (B, S, H, hd))).astype(dtype)
+               for _ in range(3))
+    out = flash_attention_op(q, k, v, causal=causal, sole=False, block=32)
+    qf = jnp.moveaxis(q, 2, 1).reshape(B * H, S, hd)
+    kf = jnp.moveaxis(k, 2, 1).reshape(B * H, S, hd)
+    vf = jnp.moveaxis(v, 2, 1).reshape(B * H, S, hd)
+    ref = K.flash_e2softmax_ref(qf, kf, vf, causal=causal, sole=False)
+    ref = jnp.moveaxis(ref.reshape(B, H, S, hd), 1, 2)
+    tol = 5e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_sole_single_block_bit_exact(rng):
+    """With one kv block the online pipeline reduces to the two-pass ref."""
+    B, S, H, hd = 2, 96, 2, 32
+    q, k, v = (jnp.asarray(rng.normal(0, 1, (B, S, H, hd)).astype(np.float32))
+               for _ in range(3))
+    out = flash_attention_op(q, k, v, causal=True, sole=True, block=96)
+    qf = jnp.moveaxis(q, 2, 1).reshape(B * H, S, hd)
+    kf = jnp.moveaxis(k, 2, 1).reshape(B * H, S, hd)
+    vf = jnp.moveaxis(v, 2, 1).reshape(B * H, S, hd)
+    ref = K.flash_e2softmax_ref(qf, kf, vf, causal=True, sole=True)
+    ref = jnp.moveaxis(ref.reshape(B, H, S, hd), 1, 2)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@pytest.mark.parametrize("kv_heads", [1, 2])
+@pytest.mark.parametrize("block", [32, 48])
+def test_flash_sole_multiblock_close(rng, kv_heads, block):
+    B, S, H, hd = 2, 96, 4, 16
+    q = jnp.asarray(rng.normal(0, 1, (B, S, H, hd)).astype(np.float32))
+    k = jnp.asarray(rng.normal(0, 1, (B, S, kv_heads, hd)).astype(np.float32))
+    v = jnp.asarray(rng.normal(0, 1, (B, S, kv_heads, hd)).astype(np.float32))
+    out = flash_attention_op(q, k, v, causal=True, sole=True, block=block)
+    kr = jnp.repeat(k, H // kv_heads, 2)
+    vr = jnp.repeat(v, H // kv_heads, 2)
+    qf = jnp.moveaxis(q, 2, 1).reshape(B * H, S, hd)
+    kf = jnp.moveaxis(kr, 2, 1).reshape(B * H, S, hd)
+    vf = jnp.moveaxis(vr, 2, 1).reshape(B * H, S, hd)
+    ref = K.flash_e2softmax_ref(qf, kf, vf, causal=True, sole=True)
+    ref = jnp.moveaxis(ref.reshape(B, H, S, hd), 1, 2)
+    # online quantized corrections deviate elementwise; mean stays tight
+    assert float(jnp.mean(jnp.abs(out - ref))) < 0.02
+
+
+def test_flash_exact_corr_beyond_paper(rng):
+    """exact_corr (fp32 rescale) should not be worse than quantized corr."""
+    B, S, H, hd = 2, 128, 2, 32
+    q, k, v = (jnp.asarray(rng.normal(0, 1, (B, S, H, hd)).astype(np.float32))
+               for _ in range(3))
+    exact = flash_attention_op(q, k, v, causal=True, sole=False, block=128)
+    a = flash_attention_op(q, k, v, causal=True, sole=True, block=32)
+    b = flash_attention_op(q, k, v, causal=True, sole=True, block=32,
+                           exact_corr=True)
+    err_a = float(jnp.mean(jnp.abs(a - exact)))
+    err_b = float(jnp.mean(jnp.abs(b - exact)))
+    assert err_b <= err_a * 1.05

@@ -1,0 +1,121 @@
+"""Per-architecture smoke tests: reduced same-family config, one forward
+and one train step on CPU, asserting shapes + finiteness (deliverable f)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ARCH_NAMES, get_config
+from repro.models import api
+from repro.train.optimizer import OptConfig, adamw_update, init_opt_state
+
+
+def _smoke_batch(cfg, rng, b=2, s=32):
+    if cfg.family == "encdec":
+        return {"frames": jnp.asarray(rng.normal(0, 0.1, (b, s, cfg.d_model)),
+                                      jnp.float32),
+                "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, 16)),
+                                      jnp.int32),
+                "targets": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, 16)),
+                                       jnp.int32)}
+    if cfg.family == "vlm":
+        pos = np.broadcast_to(np.arange(s, dtype=np.int32), (3, b, s)).copy()
+        return {"embeds": jnp.asarray(rng.normal(0, 0.1, (b, s, cfg.d_model)),
+                                      jnp.float32),
+                "positions": jnp.asarray(pos),
+                "targets": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)),
+                                       jnp.int32)}
+    toks = rng.integers(0, cfg.vocab_size, (b, s + 1))
+    return {"tokens": jnp.asarray(toks[:, :-1], jnp.int32),
+            "targets": jnp.asarray(toks[:, 1:], jnp.int32)}
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_smoke_forward_and_train_step(arch, rng):
+    cfg = get_config(arch).smoke()
+    params, _ = api.init_params(jax.random.PRNGKey(0), cfg)
+    batch = _smoke_batch(cfg, rng)
+
+    logits = api.forward(params, batch, cfg, "serve")
+    b = batch["targets"].shape[0]
+    s = (batch["tokens"].shape[1] if "tokens" in batch
+         else batch["targets"].shape[1])
+    assert logits.shape == (b, s, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits))), "NaN/inf in serve logits"
+
+    # one full train step (grad + adamw)
+    opt = init_opt_state(params)
+
+    @jax.jit
+    def step(p, o, bt):
+        (loss, m), g = jax.value_and_grad(api.loss_fn, has_aux=True)(p, bt, cfg)
+        p2, o2, om = adamw_update(p, g, o, OptConfig(lr=1e-3))
+        return p2, o2, loss, om["grad_norm"]
+
+    p2, o2, loss, gnorm = step(params, opt, batch)
+    assert bool(jnp.isfinite(loss)) and bool(jnp.isfinite(gnorm))
+    # params changed
+    delta = sum(float(jnp.sum(jnp.abs(a - b0)))
+                for a, b0 in zip(jax.tree.leaves(p2), jax.tree.leaves(params)))
+    assert delta > 0
+
+
+@pytest.mark.parametrize("arch", ["qwen2_0_5b", "mixtral_8x7b", "rwkv6_7b",
+                                  "recurrentgemma_9b"])
+def test_smoke_sole_serve_close_to_exact(arch, rng):
+    """SOLE vs exact serving logits stay correlated (no-retraining claim,
+    smoke scale)."""
+    cfg = get_config(arch).smoke()
+    params, _ = api.init_params(jax.random.PRNGKey(0), cfg)
+    batch = _smoke_batch(cfg, rng)
+    exact_cfg = dataclasses.replace(cfg, softmax_mode="exact",
+                                    norm_mode="exact", logit_int8=False)
+    a = api.forward(params, batch, cfg, "serve")
+    b = api.forward(params, batch, exact_cfg, "serve")
+    af, bf = np.asarray(a).ravel(), np.asarray(b).ravel()
+    corr = np.corrcoef(af, bf)[0, 1]
+    assert corr > 0.95
+
+
+def test_all_configs_match_assignment():
+    """Exact assigned dimensions for every architecture."""
+    spec = {
+        "dbrx_132b": (40, 6144, 48, 8, 10752, 100352),
+        "mixtral_8x7b": (32, 4096, 32, 8, 14336, 32000),
+        "qwen2_0_5b": (24, 896, 14, 2, 4864, 151936),
+        "stablelm_1_6b": (24, 2048, 32, 32, 5632, 100352),
+        "nemotron_4_15b": (32, 6144, 48, 8, 24576, 256000),
+        "minitron_8b": (32, 4096, 32, 8, 16384, 256000),
+        "whisper_small": (12, 768, 12, 12, 3072, 51865),
+        "qwen2_vl_7b": (28, 3584, 28, 4, 18944, 152064),
+        "rwkv6_7b": (32, 4096, 64, 64, 14336, 65536),
+        "recurrentgemma_9b": (38, 4096, 16, 1, 12288, 256000),
+    }
+    for arch, (nl, d, h, kv, ff, v) in spec.items():
+        cfg = get_config(arch)
+        assert cfg.n_layers == nl, arch
+        assert cfg.d_model == d, arch
+        assert cfg.n_heads == h, arch
+        assert cfg.n_kv_heads == kv, arch
+        assert cfg.d_ff == ff, arch
+        assert cfg.vocab_size == v, arch
+    assert get_config("dbrx_132b").n_experts == 16
+    assert get_config("dbrx_132b").top_k == 4
+    assert get_config("mixtral_8x7b").n_experts == 8
+    assert get_config("mixtral_8x7b").top_k == 2
+    assert get_config("mixtral_8x7b").window == 4096
+    assert get_config("recurrentgemma_9b").block_pattern == ("rec", "rec", "attn")
+
+
+def test_param_counts_plausible():
+    """Analytic param counts should be near the published sizes."""
+    approx = {
+        "dbrx_132b": 132e9, "mixtral_8x7b": 47e9, "qwen2_0_5b": 0.5e9,
+        "stablelm_1_6b": 1.6e9, "nemotron_4_15b": 15e9, "minitron_8b": 8e9,
+        "rwkv6_7b": 7e9, "recurrentgemma_9b": 9e9, "qwen2_vl_7b": 7e9,
+    }
+    for arch, n in approx.items():
+        got = get_config(arch).param_count()
+        assert 0.55 * n < got < 1.75 * n, f"{arch}: {got:.2e} vs {n:.2e}"

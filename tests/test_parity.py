@@ -1,0 +1,72 @@
+"""Serving correctness: prefill + decode == full forward, per family."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import ARCH_NAMES, get_config
+from repro.models import api
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_prefill_decode_parity(arch):
+    cfg = get_config(arch).smoke()
+    kw = dict(softmax_mode="exact", norm_mode="exact", logit_int8=False)
+    if cfg.is_moe:
+        kw["capacity_factor"] = 8.0  # no drops => decode == forward
+    cfg = dataclasses.replace(cfg, **kw)
+    m = api.get_model(cfg)
+    params, _ = api.init_params(jax.random.PRNGKey(0), cfg)
+    b, s, extra = 2, 16, 4
+    toks = jax.random.randint(jax.random.PRNGKey(1), (b, s + extra), 0,
+                              cfg.vocab_size)
+    if cfg.family == "encdec":
+        frames = jax.random.normal(jax.random.PRNGKey(2),
+                                   (b, 24, cfg.d_model)) * 0.1
+        full = m.forward(params, {"frames": frames, "tokens": toks}, cfg,
+                         "serve")
+        logits_p, cache = m.prefill(
+            params, {"frames": frames, "tokens": toks[:, :s]}, cfg, s + extra)
+    elif cfg.family == "vlm":
+        embeds = jnp.take(params["embed"]["table"], toks, axis=0)
+        pos3 = jnp.broadcast_to(jnp.arange(s + extra),
+                                (3, b, s + extra)).astype(jnp.int32)
+        full = m.forward(params, {"embeds": embeds, "positions": pos3}, cfg,
+                         "serve")
+        logits_p, cache = m.prefill(
+            params, {"embeds": embeds[:, :s], "positions": pos3[:, :, :s]},
+            cfg, s + extra)
+    else:
+        fw = m.forward(params, toks, cfg, "serve")
+        full = fw[0] if isinstance(fw, tuple) else fw
+        logits_p, cache = m.prefill(params, toks[:, :s], cfg, s + extra)
+    errs = [float(jnp.max(jnp.abs(logits_p[:, 0] - full[:, s - 1])))]
+    for i in range(extra):
+        lg, cache = m.decode_step(params, cache, toks[:, s + i],
+                                  jnp.asarray(s + i, jnp.int32), cfg)
+        errs.append(float(jnp.max(jnp.abs(lg - full[:, s + i]))))
+    assert max(errs) < 2e-3, f"parity broken: {errs}"
+
+
+def test_sliding_window_rolling_cache():
+    """Mixtral-style SWA: decode beyond the window uses the rolling buffer."""
+    cfg = dataclasses.replace(
+        get_config("mixtral_8x7b").smoke(), window=8,
+        softmax_mode="exact", norm_mode="exact", logit_int8=False,
+        capacity_factor=8.0)
+    m = api.get_model(cfg)
+    params, _ = api.init_params(jax.random.PRNGKey(0), cfg)
+    b, total = 1, 24
+    toks = jax.random.randint(jax.random.PRNGKey(1), (b, total), 0,
+                              cfg.vocab_size)
+    fw = m.forward(params, toks, cfg, "serve")
+    full = fw[0] if isinstance(fw, tuple) else fw
+    s = 12
+    logits_p, cache = m.prefill(params, toks[:, :s], cfg, total)
+    errs = [float(jnp.max(jnp.abs(logits_p[:, 0] - full[:, s - 1])))]
+    for i in range(total - s):
+        lg, cache = m.decode_step(params, cache, toks[:, s + i],
+                                  jnp.asarray(s + i, jnp.int32), cfg)
+        errs.append(float(jnp.max(jnp.abs(lg - full[:, s + i]))))
+    assert max(errs) < 2e-3, f"SWA rolling cache parity broken: {errs}"

@@ -1,0 +1,82 @@
+"""Logical-axis rules: divisibility fallback + ZeRO-1 spec (no mesh exec)."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding.rules import DEFAULT_RULES, Rules, zero1_spec
+
+
+def _fake_rules(axis_sizes):
+    """Rules over a 1-device mesh with injected production axis sizes
+    (spec logic only touches axis_sizes)."""
+    mesh = jax.make_mesh((1,), ("data",))
+    r = Rules.__new__(Rules)
+    r.mesh = mesh
+    r.table = dict(DEFAULT_RULES)
+    r.axis_sizes = dict(axis_sizes)
+    return r
+
+
+def test_divisible_dims_shard():
+    r = _fake_rules({"data": 16, "model": 16})
+    assert r.spec(("batch", None, "ff"), (256, 4096, 14336)) == \
+        P("data", None, "model")
+    assert r.spec(("embed", "heads", "head_dim"), (896, 48, 128)) == \
+        P(None, "model", None)
+
+
+def test_nondivisible_heads_fall_back_replicated():
+    r = _fake_rules({"data": 16, "model": 16})
+    # qwen2-0.5b: 14 heads, whisper: 12 heads -> replicate
+    assert r.spec(("embed", "heads", "head_dim"), (896, 14, 64)) == \
+        P(None, None, None)
+    # kv heads 8 on 16-way model -> replicate (Megatron behavior)
+    assert r.spec(("embed", "kv_heads", "head_dim"), (6144, 8, 128)) == \
+        P(None, None, None)
+
+
+def test_batch_prefix_fallback_multi_pod():
+    r = _fake_rules({"pod": 2, "data": 16, "model": 16})
+    # batch 256 divisible by pod*data=32
+    assert r.spec(("batch", None), (256, 4096)) == P(("pod", "data"), None)
+    # batch 1 (long_500k): fully replicated
+    assert r.spec(("batch", None), (1, 524288)) == P(None, None)
+
+
+def test_experts_rule():
+    r = _fake_rules({"data": 16, "model": 16})
+    assert r.dim_spec("experts", 16) == "data"     # dbrx
+    assert r.dim_spec("experts", 8) is None        # mixtral falls back
+
+
+def test_vocab_padding_shards():
+    r = _fake_rules({"data": 16, "model": 16})
+    # whisper vocab 51865 is padded to 51968 = 406*128 (divisible by 16)
+    from repro.configs.base import get_config
+    cfg = get_config("whisper_small")
+    assert cfg.padded_vocab % 128 == 0
+    assert r.dim_spec("vocab", cfg.padded_vocab) == "model"
+    assert r.dim_spec("vocab", cfg.vocab_size) is None
+
+
+def test_zero1_spec_shards_largest_free_dim():
+    r = _fake_rules({"data": 16, "model": 16})
+    spec = P(None, "model")
+    out = zero1_spec(spec, (8192, 14336), r)
+    assert out == P("data", "model")
+    # no free divisible dim -> unchanged
+    out2 = zero1_spec(P("model",), (14336,), r)
+    assert out2 == P("model")
+    # already uses data -> unchanged
+    out3 = zero1_spec(P("data", None), (256, 31), r)
+    assert out3 == P("data", None)
+
+
+def test_constrain_noop_without_rules():
+    import jax.numpy as jnp
+
+    from repro.sharding.rules import constrain
+    x = jnp.ones((4, 4))
+    np.testing.assert_array_equal(np.asarray(constrain(x, "batch", None)),
+                                  np.asarray(x))

@@ -1,0 +1,126 @@
+"""E2Softmax unit + property tests (paper §III-B)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.nonlin import softmax_fn
+from repro.core.sole.e2softmax import (aldivision, e2softmax,
+                                       e2softmax_online, log2exp, pack_e2,
+                                       unpack_e2)
+
+
+def test_log2exp_values():
+    # Log2Exp(0) = 0; Log2Exp(-ln2) ~= 1; clipping at 2^b - 1
+    x = jnp.array([0.0, -0.6931, -2.0, -100.0])
+    k = log2exp(x, exp_bits=4)
+    assert k.tolist() == [0, 1, 3, 15]
+    k6 = log2exp(x, exp_bits=6)
+    assert k6.tolist()[-1] == 63
+
+
+def test_log2exp_shift_add_equivalence():
+    # 1.4375 == 1 + 1/2 - 1/16 exactly (the hardware shift-add form)
+    x = np.linspace(-10, 0, 1001)
+    hw = -(np.round(x + x / 2 - x / 16))
+    assert np.array_equal(np.asarray(log2exp(jnp.asarray(x), exp_bits=6)),
+                          np.clip(hw, 0, 63))
+
+
+def test_aldivision_factors():
+    # paper Eq. 17: output constants 0.818 / 0.568 for k_y = k_s = 0
+    out0 = aldivision(jnp.zeros((), jnp.int32), jnp.asarray(1.0))   # s=0
+    out1 = aldivision(jnp.zeros((), jnp.int32), jnp.asarray(1.75))  # s>=.5
+    assert np.isclose(float(out0), 1.636 / 2)
+    assert np.isclose(float(out1), 1.136 / 2)
+
+
+def test_aldivision_unbiased_expectation():
+    # Averaged over uniform s, ALDivision should be ~unbiased (Eq. 12-13).
+    s = np.linspace(0, 0.999, 20001)
+    S = (1 + s) * 4.0  # k_s = 2
+    approx = np.asarray(aldivision(jnp.zeros(S.shape, jnp.int32),
+                                   jnp.asarray(S, jnp.float32)))
+    exact = 1.0 / S
+    rel_bias = np.mean(approx - exact) / np.mean(exact)
+    assert abs(rel_bias) < 0.01
+
+
+@pytest.mark.parametrize("mode", ["sole", "softermax", "ibert"])
+def test_softmax_close_to_exact(rng, mode):
+    x = jnp.asarray(rng.normal(0, 3, (8, 785)).astype(np.float32))
+    ref = jax.nn.softmax(x, -1)
+    out = softmax_fn(mode)(x)
+    cos = jnp.sum(out * ref, -1) / (
+        jnp.linalg.norm(out, axis=-1) * jnp.linalg.norm(ref, axis=-1))
+    assert float(jnp.min(cos)) > 0.98
+    assert float(jnp.mean(jnp.abs(out - ref))) < 2e-3
+
+
+def test_e2softmax_sum_near_one(rng):
+    x = jnp.asarray(rng.normal(0, 2, (64, 512)).astype(np.float32))
+    s = jnp.sum(e2softmax(x), -1)
+    assert float(jnp.min(s)) > 0.6 and float(jnp.max(s)) < 1.5
+
+
+def test_e2softmax_masked_exact_zero(rng):
+    x = jnp.asarray(rng.normal(0, 2, (4, 64)).astype(np.float32))
+    mask = jnp.asarray(rng.random((4, 64)) < 0.5)
+    out = e2softmax(x, mask=mask)
+    assert float(jnp.max(jnp.abs(jnp.where(mask, 0.0, out)))) == 0.0
+
+
+def test_e2softmax_online_matches_batch(rng):
+    x = jnp.asarray(rng.normal(0, 2, (16, 300)).astype(np.float32))
+    a = e2softmax(x)
+    b = e2softmax_online(x, block=64)
+    # online rescale is quantized (paper Alg.1) — small mean deviation,
+    # bounded elementwise ratio.
+    assert float(jnp.mean(jnp.abs(a - b))) < 2e-3
+
+
+def test_pack_unpack_roundtrip():
+    k = jnp.arange(32, dtype=jnp.int32)
+    for qbit in (0, 1):
+        q = jnp.full_like(k, qbit, dtype=bool)
+        code = pack_e2(k, q)
+        vals = unpack_e2(code)
+        expect = jnp.exp2(-(k.astype(jnp.float32) + 1)) * (1.636 - 0.5 * qbit)
+        np.testing.assert_allclose(np.asarray(vals), np.asarray(expect),
+                                   rtol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(shift=st.floats(-50, 50),
+       seed=st.integers(0, 2**31 - 1),
+       n=st.integers(2, 200))
+def test_property_shift_invariance(shift, seed, n):
+    """Softmax(x + c) == Softmax(x) *exactly* for E2Softmax: the codes
+    depend only on x - max(x)."""
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(r.normal(0, 3, (n,)).astype(np.float32))
+    a = e2softmax(x)
+    b = e2softmax(x + jnp.float32(shift))
+    # fp addition of the shift can perturb ties by 1 ulp; allow code-level
+    # equality on all but ulp-boundary elements.
+    agree = np.mean(np.asarray(a) == np.asarray(b))
+    assert agree > 0.95
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 300),
+       scale=st.floats(0.1, 10))
+def test_property_output_range_and_order(seed, n, scale):
+    """Outputs lie in (0, 0.818] and are monotone in the input order."""
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(r.normal(0, scale, (n,)).astype(np.float32))
+    out = np.asarray(e2softmax(x))
+    assert out.min() > 0.0
+    assert out.max() <= 0.818 * (1 + 1e-6)
+    # larger logit -> probability not smaller beyond quantization step 2x
+    order = np.argsort(np.asarray(x))
+    sorted_out = out[order]
+    ratio = sorted_out[1:] / np.maximum(sorted_out[:-1], 1e-30)
+    assert np.all(ratio > 0.49)  # one quantization level of slack
