@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 import time
-from typing import Callable, Dict
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

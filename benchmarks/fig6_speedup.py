@@ -13,7 +13,6 @@ Two views (we have no GPU/ASIC in this container):
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -6,9 +6,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.nonlin import layernorm_fn, softmax_fn
+from repro.core.nonlin import layernorm_fn
 from repro.core.sole import calibrate_ptf, dynamic_compress, e2softmax
-from repro.kernels.ops import ailayernorm_op, e2softmax_op, flash_attention_op
+from repro.kernels.ops import e2softmax_op, flash_attention_op
 
 rng = np.random.default_rng(0)
 

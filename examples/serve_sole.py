@@ -1,8 +1,12 @@
-"""End-to-end serving driver: batched requests through the Engine with the
-SOLE pipeline (E2Softmax attention + AILayerNorm) active — the paper's
-deployment scenario.
+"""End-to-end serving driver: a request trace through the paged
+continuous-batching engine with the SOLE pipeline (E2Softmax attention +
+AILayerNorm) active — the paper's deployment scenario.
 
-Run:  PYTHONPATH=src python examples/serve_sole.py [--arch mixtral_8x7b]
+Decode and chunked-prefill attention stream KV pages through the fused
+``flash_e2softmax_pallas`` paged kernels; pages are admitted/reclaimed by
+the scheduler so the KV pool holds only live tokens.
+
+Run:  PYTHONPATH=src python examples/serve_sole.py [--arch qwen2_0_5b]
 """
 import argparse
 import time
@@ -12,7 +16,7 @@ import numpy as np
 
 from repro.configs.base import get_config
 from repro.models import api
-from repro.serve.engine import Engine, Request
+from repro.serve.engine import Engine, PagedEngine, Request
 
 
 def main():
@@ -20,6 +24,10 @@ def main():
     ap.add_argument("--arch", default="qwen2_0_5b")
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--new-tokens", type=int, default=12)
+    ap.add_argument("--backend", default="pallas",
+                    choices=["pallas", "reference"])
+    ap.add_argument("--dense", action="store_true",
+                    help="also run the dense-slot baseline engine")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).smoke()   # CPU-runnable reduced config
@@ -30,14 +38,28 @@ def main():
     reqs = [Request(prompt=rng.integers(0, cfg.vocab_size, size=8 + i % 5)
                     .astype(np.int32), max_new_tokens=args.new_tokens)
             for i in range(args.requests)]
-    eng = Engine(cfg, params, batch_size=4, max_len=64)
+
+    eng = PagedEngine(cfg, params, num_blocks=48, block_size=8,
+                      max_seq_len=64, max_running=8, decode_batch=4,
+                      prefill_chunk=8, backend=args.backend)
     t0 = time.perf_counter()
     outs = eng.generate(reqs)
     dt = time.perf_counter() - t0
     n = sum(len(o) for o in outs)
-    print(f"served {len(reqs)} requests, {n} tokens in {dt:.2f}s "
-          f"({n / dt:.1f} tok/s on CPU, batched slots of 4)")
+    print(f"paged[{args.backend}]: {len(reqs)} requests, {n} tokens in "
+          f"{dt:.2f}s ({n / dt:.1f} tok/s on CPU) — peak pages "
+          f"{eng.cache.peak_blocks_in_use}/{eng.cache.num_blocks - 1}, "
+          f"{eng.steps} engine steps")
     print("sample continuations:", outs[0][:8], outs[1][:8])
+
+    if args.dense:
+        deng = Engine(cfg, params, batch_size=4, max_len=64)
+        t0 = time.perf_counter()
+        douts = deng.generate(reqs)
+        dt = time.perf_counter() - t0
+        dn = sum(len(o) for o in douts)
+        print(f"dense-slot baseline: {dn} tokens in {dt:.2f}s "
+              f"({dn / dt:.1f} tok/s, batch of 4 x max_len 64 cache)")
 
 
 if __name__ == "__main__":

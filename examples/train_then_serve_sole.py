@@ -10,7 +10,6 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import ShapeConfig, get_config
 from repro.data.pipeline import SyntheticLM

@@ -6,7 +6,6 @@ model. See DESIGN.md §2 for the ASIC→TPU mapping.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

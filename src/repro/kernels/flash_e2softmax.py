@@ -31,6 +31,51 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core.sole.e2softmax import ALDIV_BIAS, INV_LN2_SHIFT_APPROX
 
 NEG = -1e30
+LOG2E = 1.4426950408889634
+
+
+def _online_update(logits, mask, m_prev, *, sole: bool, exp_bits: int,
+                   int8_scale: Optional[float], exact_corr: bool):
+    """One online-softmax block update shared by all kernel variants.
+
+    Returns (m_new, w, corr): the new running max, the (masked) block
+    weights, and the rescale factor for the running (sum, acc) — either
+    the paper's quantized Correction 2^{-Log2Exp(dm)} or the fp32
+    exact rescale (exact_corr).
+    """
+    m_new = jnp.maximum(m_prev, jnp.max(logits, -1))
+    dm = logits - m_new[..., None]
+    if sole:
+        if int8_scale is not None:
+            dm = jnp.clip(jnp.round(dm / int8_scale), -127, 0) * int8_scale
+        kcode = jnp.clip(jnp.round(-dm * INV_LN2_SHIFT_APPROX),
+                         0.0, float(2 ** exp_bits - 1))
+        w = jnp.where(mask, jnp.exp2(-kcode), 0.0)
+        if exact_corr:
+            # beyond-paper: fp32 rescale (free on TPU — the running
+            # accumulator is fp32 VMEM anyway); recovers two-pass
+            # accuracy while keeping 4-bit w codes.
+            corr = jnp.exp2((m_prev - m_new) * LOG2E)
+        else:
+            # paper Alg.1: quantized Correction 2^{-Log2Exp(dm)}
+            sub = jnp.clip(
+                jnp.round(-(m_prev - m_new) * INV_LN2_SHIFT_APPROX),
+                0.0, float(2 ** (exp_bits + 2) - 1))
+            corr = jnp.exp2(-sub)
+    else:
+        w = jnp.where(mask, jnp.exp2(dm * LOG2E), 0.0)
+        corr = jnp.exp2((m_prev - m_new) * LOG2E)
+    return m_new, w, corr
+
+
+def _final_scale(s, *, sole: bool):
+    """Per-row output scale: ALDivision (sole) or exact 1/s."""
+    s = jnp.maximum(s, 2.0 ** -30)
+    if sole:
+        mant, expo = jnp.frexp(s)
+        factor = jnp.where(mant >= 0.75, ALDIV_BIAS - 0.5, ALDIV_BIAS)
+        return jnp.exp2(-expo.astype(jnp.float32)) * factor
+    return 1.0 / s
 
 
 def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, s_ref, acc_ref, *,
@@ -68,30 +113,9 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, s_ref, acc_ref, *,
             rows = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
             mask = mask & (rows >= cols)
         logits = jnp.where(mask, logits, NEG)
-        m_prev = m_ref[...]
-        m_new = jnp.maximum(m_prev, jnp.max(logits, -1))
-        dm = logits - m_new[:, None]
-        if sole:
-            if int8_scale is not None:
-                dm = jnp.clip(jnp.round(dm / int8_scale), -127, 0) * int8_scale
-            kcode = jnp.clip(jnp.round(-dm * INV_LN2_SHIFT_APPROX),
-                             0.0, float(2 ** exp_bits - 1))
-            w = jnp.where(mask, jnp.exp2(-kcode), 0.0)
-            if exact_corr:
-                # beyond-paper: fp32 rescale (free on TPU — the running
-                # accumulator is fp32 VMEM anyway); recovers two-pass
-                # accuracy while keeping 4-bit w codes.
-                corr = jnp.exp2((m_prev - m_new) * 1.4426950408889634)
-            else:
-                # paper Alg.1: quantized Correction 2^{-Log2Exp(dm)}
-                sub = jnp.clip(
-                    jnp.round(-(m_prev - m_new) * INV_LN2_SHIFT_APPROX),
-                    0.0, float(2 ** (exp_bits + 2) - 1))
-                corr = jnp.exp2(-sub)
-        else:
-            w = jnp.where(mask,
-                          jnp.exp2(dm * 1.4426950408889634), 0.0)
-            corr = jnp.exp2((m_prev - m_new) * 1.4426950408889634)
+        m_new, w, corr = _online_update(
+            logits, mask, m_ref[...], sole=sole, exp_bits=exp_bits,
+            int8_scale=int8_scale, exact_corr=exact_corr)
         m_ref[...] = m_new
         s_ref[...] = s_ref[...] * corr + jnp.sum(w, -1)
         acc_ref[...] = (acc_ref[...] * corr[:, None]
@@ -101,13 +125,7 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, s_ref, acc_ref, *,
 
     @pl.when(ik == nk - 1)
     def _final():
-        s = jnp.maximum(s_ref[...], 2.0 ** -30)
-        if sole:
-            mant, expo = jnp.frexp(s)
-            factor = jnp.where(mant >= 0.75, ALDIV_BIAS - 0.5, ALDIV_BIAS)
-            scale_out = jnp.exp2(-expo.astype(jnp.float32)) * factor
-        else:
-            scale_out = 1.0 / s
+        scale_out = _final_scale(s_ref[...], sole=sole)
         o_ref[0] = acc_ref[...] * scale_out[:, None]
 
 
@@ -157,3 +175,153 @@ def flash_e2softmax_pallas(q, k, v, *, causal: bool = True,
         interpret=interpret,
     )(q, k, v)
     return out[:, :s] if pad_q else out
+
+
+# -- paged variants (serve path: KV lives in a block-paged pool) --------------
+
+
+def _paged_kernel(meta_ref, table_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_ref, s_ref, acc_ref, *, causal: bool, sole: bool,
+                  exp_bits: int, int8_scale: Optional[float],
+                  exact_corr: bool, scale: float, block_size: int,
+                  num_blocks: int, kv_scale: Optional[float]):
+    """Gather-by-page-table flash attention (one sequence per grid row).
+
+    Grid (B, H, NB). The k/v BlockSpec index maps read the page id from
+    the scalar-prefetched ``table_ref`` so each (b, j) step DMAs exactly
+    one KV page — the pool is never gathered into a contiguous cache.
+    ``meta_ref[b] = (q_start, kv_len)``: absolute position of q row 0 and
+    the number of valid keys (entries past kv_len are masked; their table
+    slots point at the null page 0).
+    """
+    b, j = pl.program_id(0), pl.program_id(2)
+    bq, d = q_ref.shape[2], q_ref.shape[3]
+    bs = block_size
+    q_start = meta_ref[b, 0]
+    kv_len = meta_ref[b, 1]
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        s_ref[...] = jnp.zeros_like(s_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    run = (j * bs) < kv_len
+    if causal:
+        # block fully masked iff every key col is beyond the last q row.
+        run &= (j * bs) <= (q_start + bq - 1)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32) * scale    # (bq, d)
+        k = k_ref[0, :, 0].astype(jnp.float32)         # (bs, d)
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        if kv_scale is not None:                       # int8 page pools
+            k = k * kv_scale
+            v = v * kv_scale
+        logits = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)        # (bq, bs)
+        cols = j * bs + jax.lax.broadcasted_iota(jnp.int32, (bq, bs), 1)
+        mask = cols < kv_len
+        if causal:
+            rows = q_start + jax.lax.broadcasted_iota(
+                jnp.int32, (bq, bs), 0)
+            mask = mask & (rows >= cols)
+        logits = jnp.where(mask, logits, NEG)
+        m_new, w, corr = _online_update(
+            logits, mask, m_ref[...], sole=sole, exp_bits=exp_bits,
+            int8_scale=int8_scale, exact_corr=exact_corr)
+        m_ref[...] = m_new
+        s_ref[...] = s_ref[...] * corr + jnp.sum(w, -1)
+        acc_ref[...] = (acc_ref[...] * corr[:, None]
+                        + jax.lax.dot_general(
+                            w, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+
+    @pl.when(j == num_blocks - 1)
+    def _final():
+        scale_out = _final_scale(s_ref[...], sole=sole)
+        o_ref[0, 0] = acc_ref[...] * scale_out[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "sole", "exp_bits", "int8_scale", "exact_corr", "interpret",
+    "kv_scale"))
+def flash_e2softmax_paged(q, k_pool, v_pool, tables, meta, *,
+                          causal: bool = True, sole: bool = True,
+                          exp_bits: int = 4,
+                          int8_scale: Optional[float] = None,
+                          exact_corr: bool = False,
+                          interpret: bool = True,
+                          kv_scale: Optional[float] = None):
+    """Fused attention over a block-paged KV pool.
+
+    Args:
+      q: (B, H, C, d) — C query tokens per sequence (a prefill chunk, or
+        C=1 for decode). GQA is handled inside the index maps (no head
+        repeat is materialized).
+      k_pool, v_pool: (N, block_size, KV, d) — the shared page pool.
+      tables: (B, NB) int32 per-sequence page tables; unused slots must
+        hold 0 (the reserved null page) so gathers stay in bounds.
+      meta: (B, 2) int32 rows (q_start, kv_len) — absolute position of
+        q row 0, and number of valid keys (kv_len includes the chunk
+        itself, which the caller writes to the pool before attending).
+
+    Returns (B, H, C, d) float32.
+    """
+    bsz, h, c, d = q.shape
+    n, bs, kvh, _ = k_pool.shape
+    nb = tables.shape[1]
+    g = h // kvh
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(bsz, h, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1, c, d),
+                         lambda b, hh, j, meta, tbl: (b, hh, 0, 0)),
+            pl.BlockSpec((1, bs, 1, d),
+                         lambda b, hh, j, meta, tbl: (tbl[b, j], 0, hh // g, 0)),
+            pl.BlockSpec((1, bs, 1, d),
+                         lambda b, hh, j, meta, tbl: (tbl[b, j], 0, hh // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, c, d),
+                               lambda b, hh, j, meta, tbl: (b, hh, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((c,), jnp.float32),
+            pltpu.VMEM((c,), jnp.float32),
+            pltpu.VMEM((c, d), jnp.float32),
+        ],
+    )
+    kern = functools.partial(
+        _paged_kernel, causal=causal, sole=sole, exp_bits=exp_bits,
+        int8_scale=int8_scale, exact_corr=exact_corr, scale=d ** -0.5,
+        block_size=bs, num_blocks=nb, kv_scale=kv_scale)
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((bsz, h, c, d), jnp.float32),
+        grid_spec=grid_spec,
+        interpret=interpret,
+    )(meta.astype(jnp.int32), tables.astype(jnp.int32), q, k_pool, v_pool)
+
+
+def flash_e2softmax_paged_decode(q, k_pool, v_pool, tables, ctx_lens, *,
+                                 sole: bool = True, exp_bits: int = 4,
+                                 int8_scale: Optional[float] = None,
+                                 exact_corr: bool = False,
+                                 interpret: bool = True,
+                                 kv_scale: Optional[float] = None):
+    """Single-query decode fast path over the paged pool.
+
+    q: (B, H, d) — the one live query per sequence; ctx_lens (B,) counts
+    valid keys *including* the current token (written before the call).
+    A lone trailing query needs no causal iota work — masking reduces to
+    ``col < ctx_len`` — so the kernel runs with causal=False.
+    """
+    meta = jnp.stack(
+        [jnp.zeros_like(ctx_lens, jnp.int32), ctx_lens.astype(jnp.int32)], 1)
+    out = flash_e2softmax_paged(
+        q[:, :, None], k_pool, v_pool, tables, meta, causal=False,
+        sole=sole, exp_bits=exp_bits, int8_scale=int8_scale,
+        exact_corr=exact_corr, interpret=interpret, kv_scale=kv_scale)
+    return out[:, :, 0]

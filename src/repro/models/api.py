@@ -8,7 +8,7 @@ ShapeDtypeStruct input builders used by the dry-run (no allocation).
 from __future__ import annotations
 
 import importlib
-from typing import Any, Dict, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -129,3 +129,25 @@ def decode_inputs(cfg: ArchConfig, shape: ShapeConfig):
     token = _sds((b,), jnp.int32)
     pos = _sds((), jnp.int32)
     return cache, axes, token, pos
+
+
+def paged_decode_inputs(cfg: ArchConfig, shape: ShapeConfig,
+                        block_size: int = 16):
+    """Abstract inputs for the paged decode step (dry-run, no allocation).
+
+    Returns (pools SDS tree, pools axes, token SDS, pos SDS, tables SDS)
+    with the pool sized to hold the full batch x seq_len footprint plus
+    the null page — the dense-cache-equivalent capacity.
+    """
+    from repro.models.layers import kv_store_dtype
+    from repro.serve.kv_cache import PAGED_KV_AXES, cdiv
+    b, s = shape.global_batch, shape.seq_len
+    num_blocks = b * cdiv(s, block_size) + 1
+    pool_shape = (cfg.n_layers, num_blocks, block_size,
+                  cfg.n_kv_heads, cfg.head_dim)
+    dt = kv_store_dtype(cfg)
+    pools = {"k": _sds(pool_shape, dt), "v": _sds(pool_shape, dt)}
+    tables = _sds((b, cdiv(s, block_size)), jnp.int32)
+    token = _sds((b,), jnp.int32)
+    pos = _sds((b,), jnp.int32)
+    return pools, PAGED_KV_AXES, token, pos, tables

@@ -663,3 +663,68 @@ def init_kv_cache(cfg: ArchConfig, batch: int, length: int,
 KV_CACHE_AXES = {"k": ("batch", "seq", "kv_heads", "head_dim"),
                  "v": ("batch", "seq", "kv_heads", "head_dim"),
                  "pos": (None,)}
+
+
+# -- paged attention (block-paged KV pool; see serve/kv_cache.py) -------------
+
+
+def _paged_kv_scale(cfg: ArchConfig):
+    return KV_INT8_SCALE if cfg.kv_cache_dtype == "int8" else None
+
+
+def paged_attend(q: Array, pool_k: Array, pool_v: Array, tables: Array,
+                 q_start: Array, kv_len: Array, cfg: ArchConfig, *,
+                 causal: bool, backend: str = "pallas") -> Array:
+    """Attention for C chunk queries per sequence against paged KV.
+
+    q: (B, C, H, hd); pool_k/pool_v: (N, bs, KV, hd) one layer's pool
+    (the chunk's own K/V already written); tables: (B, NB) page tables;
+    q_start/kv_len: (B,) absolute position of q row 0 / valid key count.
+
+    backend "pallas" streams pages through flash_e2softmax_paged (SOLE's
+    online-softmax in the serving hot loop); "reference" gathers pages to
+    a contiguous cache and reuses the two-pass softmax_fn path — the
+    oracle for paged-vs-dense equivalence tests and non-SOLE modes.
+    """
+    b, c, h, hd = q.shape
+    mode = _softmax_mode(cfg, phase="serve")
+    if backend == "pallas":
+        if mode not in ("sole", "exact"):
+            raise ValueError(
+                f"pallas paged backend supports sole/exact, got {mode}")
+        from repro.kernels.flash_e2softmax import flash_e2softmax_paged
+        sole = mode == "sole"
+        meta = jnp.stack([q_start.astype(jnp.int32),
+                          kv_len.astype(jnp.int32)], 1)
+        ctx = flash_e2softmax_paged(
+            jnp.moveaxis(q, 1, 2), pool_k, pool_v, tables, meta,
+            causal=causal, sole=sole, exp_bits=cfg.exp_bits,
+            int8_scale=(LOGIT_INT8_SCALE if sole and cfg.logit_int8
+                        else None),
+            kv_scale=_paged_kv_scale(cfg))
+        return jnp.moveaxis(ctx, 1, 2).astype(q.dtype)
+    if backend != "reference":
+        raise ValueError(f"unknown paged backend {backend!r}")
+    from repro.serve.kv_cache import gather_kv
+    k = kv_dequant(gather_kv(pool_k, tables), cfg)      # (B, T, KV, hd)
+    v = kv_dequant(gather_kv(pool_v, tables), cfg)
+    t = k.shape[1]
+    kf = _repeat_kv(cast(k, cfg), h)
+    vf = _repeat_kv(cast(v, cfg), h)
+    qs = q * (hd ** -0.5)
+    logits = jnp.einsum("bchd,bthd->bhct", qs, kf).astype(jnp.float32)
+    cols = jnp.arange(t)[None, None, None, :]
+    mask = cols < kv_len[:, None, None, None]
+    if causal:
+        rows = q_start[:, None] + jnp.arange(c)[None]   # (B, C)
+        mask = mask & (rows[:, None, :, None] >= cols)
+    mask = jnp.broadcast_to(mask, logits.shape)
+    if mode == "sole":
+        m = jnp.max(jnp.where(mask, logits, -jnp.inf), -1, keepdims=True)
+        m = jnp.maximum(m, -1e30)
+        probs = softmax_fn("sole")(_snap_logits(logits - m, cfg), mask=mask,
+                                   exp_bits=cfg.exp_bits)
+    else:
+        probs = softmax_fn(mode)(logits, mask=mask)
+    ctx = jnp.einsum("bhct,bthd->bchd", probs.astype(q.dtype), vf)
+    return ctx

@@ -28,6 +28,15 @@ from repro.sharding.rules import active_rules
 
 Array = jax.Array
 
+# jax >= 0.6 exposes jax.shard_map (replication-check kwarg: check_vma);
+# 0.4/0.5 ship it under jax.experimental with check_rep.
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+    _SHARD_MAP_NOCHECK = {"check_vma": False}
+else:  # pragma: no cover - exercised on older jax only
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _SHARD_MAP_NOCHECK = {"check_rep": False}
+
 
 def init_moe_ffn(key, cfg: ArchConfig):
     d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
@@ -161,11 +170,11 @@ def apply_moe_ffn(p, x: Array, cfg: ArchConfig, phase: str):
     wspec_d = P(ep, tp, None)
     fn = partial(_moe_inner, cfg=cfg, ep_axis=ep_axis, tp_axis=tp_axis,
                  bd_axes=bd_axes, ep_size=ep_size)
-    out, aux = jax.shard_map(
+    out, aux = _shard_map(
         fn, mesh=mesh,
         in_specs=(xspec, P(None, None), wspec_g, wspec_g, wspec_d),
         out_specs=(xspec, P()),
-        check_vma=False,
+        **_SHARD_MAP_NOCHECK,
     )(x, wr, wg, wu, wd)
     return out, aux
 

@@ -10,7 +10,7 @@ as shift-and-multiply-accumulate, which shards trivially.
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

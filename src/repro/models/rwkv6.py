@@ -13,7 +13,7 @@ state, which is why rwkv6 runs the long_500k cell.
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -3,7 +3,7 @@ backbone). MoE archs reuse this module with the FFN swapped (models/moe.py).
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -167,3 +167,84 @@ def decode_step(params, cache, token: Array, pos: Array, cfg: ArchConfig,
     x = L.apply_norm(x, params["final_norm"], cfg, "serve")
     logits = L.lm_logits(params["embed"], x, cfg)
     return logits[:, 0], {"k": ck, "v": cv, "pos": cpos}
+
+
+# -- paged serving (block-paged KV pool; see serve/kv_cache.py) ---------------
+
+
+def _paged_forward(params, tokens, positions, kv_len, tables, pools,
+                   cfg: ArchConfig, *, causal: bool, backend: str,
+                   ffn_apply=None):
+    """Run C tokens per sequence against the paged pools.
+
+    tokens/positions: (B, C) — absolute positions (a prefill chunk, or
+    C=1 for decode); kv_len: (B,) valid keys after this chunk's writes;
+    tables: (B, NB) page tables; pools: {"k","v"} (L, N, bs, KV, hd).
+
+    Each layer writes the chunk's K/V into its pages *before* attending,
+    so queries see themselves through the same page-table path as the
+    rest of the context. Layers run as a Python loop (pools carry a
+    per-layer scatter that scan cannot batch); returns (logits (B,C,V),
+    updated pools).
+    """
+    from repro.serve.kv_cache import slots_for_positions, write_tokens
+    ffn_apply = ffn_apply or (lambda p, x, c, ph: L.apply_mlp(x, p, c))
+    x = L.embed_tokens(params["embed"], tokens, cfg)
+    q_start = positions[:, 0]
+    pk, pv = pools["k"], pools["v"]
+    block_size = pk.shape[2]
+    block_ids, offsets = slots_for_positions(positions, block_size, tables)
+    leaves = [jax.tree.map(lambda a: a[i], params["layers"])
+              for i in range(cfg.n_layers)]
+    for i, lp in enumerate(leaves):
+        h = L.apply_norm(x, lp["ln1"], cfg, "serve")
+        q, k, v = L._project_qkv(lp["attn"], h, cfg)
+        if cfg.pos_kind == "rope":
+            q = L.apply_rope(q, positions, cfg)
+            k = L.apply_rope(k, positions, cfg)
+        pk = pk.at[i].set(write_tokens(pk[i], L.kv_quant(k, cfg),
+                                       block_ids, offsets))
+        pv = pv.at[i].set(write_tokens(pv[i], L.kv_quant(v, cfg),
+                                       block_ids, offsets))
+        ctx = L.paged_attend(q, pk[i], pv[i], tables, q_start, kv_len,
+                             cfg, causal=causal, backend=backend)
+        x = x + jnp.einsum("bshk,hkd->bsd", ctx, L.cast(lp["attn"]["wo"], cfg))
+        h = L.apply_norm(x, lp["ln2"], cfg, "serve")
+        x = x + ffn_apply(lp["mlp"], h, cfg, "serve")
+        x = constrain(x, "batch", "seq", "embed")
+    x = L.apply_norm(x, params["final_norm"], cfg, "serve")
+    logits = L.lm_logits(params["embed"], x, cfg)
+    return logits, {"k": pk, "v": pv}
+
+
+def prefill_paged(params, tokens: Array, q_start: Array, tables: Array,
+                  pools, cfg: ArchConfig, *, backend: str = "pallas",
+                  ffn_apply=None):
+    """One chunked-prefill step: write + attend C prompt tokens.
+
+    tokens (B, C) at absolute positions q_start..q_start+C-1 (B,);
+    returns (logits (B, C, V), pools). Padded tail tokens in the final
+    chunk land at positions >= prompt_len — causality keeps them out of
+    every real query's context, and decode later overwrites their slots.
+    """
+    c = tokens.shape[1]
+    positions = q_start[:, None] + jnp.arange(c)[None]
+    kv_len = q_start + c
+    return _paged_forward(params, tokens, positions, kv_len, tables, pools,
+                          cfg, causal=True, backend=backend,
+                          ffn_apply=ffn_apply)
+
+
+def decode_step_paged(params, pools, token: Array, pos: Array,
+                      tables: Array, cfg: ArchConfig, *,
+                      backend: str = "pallas", ffn_apply=None):
+    """One continuous-batching decode step: token (B,) at positions (B,).
+
+    The live token is written to its page first, then attended through
+    the single-query fast path (kv_len = pos + 1, no causal iota work).
+    Returns (logits (B, V), pools).
+    """
+    logits, pools = _paged_forward(
+        params, token[:, None], pos[:, None], pos + 1, tables, pools,
+        cfg, causal=False, backend=backend, ffn_apply=ffn_apply)
+    return logits[:, 0], pools

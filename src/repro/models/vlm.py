@@ -6,7 +6,7 @@ with all three position axes equal (the paper's text-token convention).
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -11,7 +11,7 @@ Shape interpretation for the assigned LM shapes (documented deviation):
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

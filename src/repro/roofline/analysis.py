@@ -17,7 +17,7 @@ terms and dispatch overhead all lower it).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict
 
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.roofline.hlo_cost import Cost

@@ -1,10 +1,18 @@
-"""Batched serving engine: prefill + decode with slot-based batching.
+"""Serving engines: paged continuous batching (PagedEngine) and the
+legacy dense-slot baseline (Engine).
 
-The engine keeps a fixed batch of slots; finished requests free their
-slot and queued requests are admitted with their prompt prefilled into
-the slot's cache region (continuous batching at step granularity). The
-decode step is one jitted function; SOLE (E2Softmax + AILayerNorm) is
-active in the serve phase per the arch config.
+:class:`PagedEngine` is the production path: a block-paged KV pool
+(serve/kv_cache.py) with token-level continuous batching and chunked
+prefill (serve/scheduler.py). Requests are admitted the moment pages
+free up; decode attention and prefill-chunk attention both stream pages
+through ``flash_e2softmax_pallas``'s paged variants, so SOLE's quantized
+online-softmax correction runs in the serving hot loop exactly as the
+paper's streaming unit intends.
+
+:class:`Engine` keeps the old dense ``batch x max_len`` slot cache and
+the unfused XLA decode path — the memory/throughput baseline that
+benchmarks/serve_throughput.py and the paged-vs-dense equivalence tests
+compare against.
 """
 from __future__ import annotations
 
@@ -17,6 +25,8 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.models import api
+from repro.serve.kv_cache import PagedKVCache
+from repro.serve.scheduler import Scheduler, Sequence
 from repro.sharding import rules as R
 
 Array = jax.Array
@@ -27,6 +37,144 @@ class Request:
     prompt: np.ndarray           # (prompt_len,) int32
     max_new_tokens: int = 16
     out: Optional[List[int]] = None
+
+
+def _run_ctx(rules: Optional[R.Rules]):
+    """(mesh context, rules context) for a generate() call."""
+    if rules is not None:
+        return rules.mesh, R.use_rules(rules)
+    import contextlib
+    return contextlib.nullcontext(), contextlib.nullcontext()
+
+
+class PagedEngine:
+    """Continuous-batching engine over a block-paged KV cache.
+
+    Two jitted steps drive the whole loop (pools are donated — the page
+    pool is updated in place):
+
+      * ``_prefill``: one chunk of one sequence's prompt (B=1, C static);
+      * ``_decode``: one token for up to ``decode_batch`` sequences (lane
+        count static; short batches are padded with null-page lanes).
+
+    ``backend="pallas"`` routes attention through the paged flash
+    kernels; ``backend="reference"`` gathers pages and reuses the XLA
+    softmax path (oracle for equivalence tests, and the fallback for
+    softmax modes the kernel does not implement).
+    """
+
+    def __init__(self, cfg: ArchConfig, params, *, num_blocks: int = 64,
+                 block_size: int = 16, max_seq_len: int = 256,
+                 max_running: int = 8, decode_batch: int = 4,
+                 prefill_chunk: int = 16, backend: str = "pallas",
+                 rules: Optional[R.Rules] = None):
+        if cfg.family != "dense":
+            raise ValueError(
+                f"PagedEngine serves dense LMs, got {cfg.family}")
+        if cfg.window:
+            raise ValueError("PagedEngine does not support sliding-window "
+                             "caches (pages are append-only)")
+        self.cfg = cfg
+        self.params = params
+        self.decode_batch = decode_batch
+        self.backend = backend
+        self.rules = rules
+        self.model = api.get_model(cfg)
+        self.cache = PagedKVCache(cfg, num_blocks=num_blocks,
+                                  block_size=block_size,
+                                  max_seq_len=max_seq_len)
+        if rules is not None:
+            self.cache.shard(rules)
+        self.sched = Scheduler(self.cache, max_running=max_running,
+                               prefill_chunk=prefill_chunk)
+        self.steps = 0
+        self.decode_tokens = 0
+        self._finished: Dict[int, List[int]] = {}
+
+        def _prefill(params, pools, tokens, q_start, tables):
+            return self.model.prefill_paged(params, tokens, q_start,
+                                            tables, pools, cfg,
+                                            backend=backend)
+
+        def _decode(params, pools, token, pos, tables):
+            return self.model.decode_step_paged(params, pools, token, pos,
+                                                tables, cfg,
+                                                backend=backend)
+
+        self._prefill = jax.jit(_prefill, donate_argnums=(1,))
+        self._decode = jax.jit(_decode, donate_argnums=(1,))
+
+    # -- one engine iteration -------------------------------------------------
+
+    def _prefill_step(self, seq: Sequence) -> None:
+        c = self.sched.prefill_chunk
+        start = seq.prefilled
+        chunk = np.zeros((1, c), np.int32)
+        real = min(c, seq.prompt_len - start)
+        chunk[0, :real] = seq.prompt[start:start + real]
+        table = jnp.asarray(self.cache.batch_tables([seq.seq_id]))
+        logits, pools = self._prefill(
+            self.params, self.cache.pools, jnp.asarray(chunk),
+            jnp.asarray([start], jnp.int32), table)
+        self.cache.pools = pools
+        seq.prefilled = start + real
+        if not seq.in_prefill:
+            # final chunk: greedy-sample the first generated token from
+            # the last *real* prompt position's logits.
+            seq.out.append(int(jnp.argmax(logits[0, real - 1])))
+
+    def _decode_step(self, batch: List[Sequence]) -> None:
+        d = self.decode_batch
+        token = np.zeros((d,), np.int32)
+        pos = np.zeros((d,), np.int32)
+        sids: List[Optional[int]] = [None] * d
+        for i, seq in enumerate(batch):
+            token[i] = seq.out[-1]
+            pos[i] = seq.prompt_len + len(seq.out) - 1
+            sids[i] = seq.seq_id
+        tables = jnp.asarray(self.cache.batch_tables(sids))
+        logits, pools = self._decode(self.params, self.cache.pools,
+                                     jnp.asarray(token), jnp.asarray(pos),
+                                     tables)
+        self.cache.pools = pools
+        next_tok = np.asarray(jnp.argmax(logits, -1))
+        for i, seq in enumerate(batch):
+            seq.out.append(int(next_tok[i]))
+            self.decode_tokens += 1
+
+    def step(self) -> None:
+        """One engine iteration: admit, one prefill chunk, one decode
+        token for the running batch, reclaim finished sequences."""
+        self.sched.admit()
+        seq = self.sched.next_prefill()
+        if seq is not None:
+            self._prefill_step(seq)
+        batch = self.sched.decode_batch(self.decode_batch)
+        if batch:
+            self._decode_step(batch)
+        for seq in list(self.sched.running):
+            if seq.done:
+                self._finished[seq.seq_id] = seq.out
+                self.sched.finish(seq)
+        self.steps += 1
+
+    # -- public API -----------------------------------------------------------
+
+    def generate(self, requests: List[Request]) -> List[List[int]]:
+        """Serve all requests to completion; outputs in request order."""
+        # validate the whole set before enqueueing anything, so a
+        # never-fits request cannot strand earlier submissions.
+        for r in requests:
+            self.sched.check_fits(r.prompt, r.max_new_tokens)
+        meshctx, rulectx = _run_ctx(self.rules)
+        order = [self.sched.submit(r.prompt, r.max_new_tokens)
+                 for r in requests]
+        with meshctx, rulectx:
+            while self.sched.has_work:
+                self.step()
+        # pop (not read) so a long-lived engine doesn't accumulate every
+        # past wave's outputs.
+        return [self._finished.pop(sid) for sid in order]
 
 
 class Engine:
@@ -52,15 +200,9 @@ class Engine:
         self._decode = jax.jit(_decode, donate_argnums=(1,))
         self._prefill = jax.jit(_prefill_one)
 
-    def _run_ctx(self):
-        if self.rules is not None:
-            return self.rules.mesh, R.use_rules(self.rules)
-        import contextlib
-        return contextlib.nullcontext(), contextlib.nullcontext()
-
     def generate(self, requests: List[Request]) -> List[List[int]]:
         """Serve all requests (batched, prompt lengths padded per batch)."""
-        meshctx, rulectx = self._run_ctx()
+        meshctx, rulectx = _run_ctx(self.rules)
         outs: List[List[int]] = []
         with meshctx, rulectx:
             for i in range(0, len(requests), self.batch):

@@ -1,0 +1,173 @@
+"""Block-paged KV cache for the serve engine (vLLM-style PagedAttention).
+
+The pool is one device allocation of ``num_blocks`` fixed-size pages per
+layer; sequences own *lists of page ids* (host-side page tables) instead
+of a dense ``max_len`` cache region, so HBM is committed per token
+actually generated, not per worst-case slot. Page 0 is reserved as the
+**null page**: page-table padding and masked-lane writes route there, so
+every gather/scatter stays in bounds without host-side branching.
+
+This is the memory half of SOLE's co-design argument carried to serving:
+the paper stores Softmax intermediates in 4-bit codes because the memory
+path, not the multiplier, bounds the unit; here the KV pool (optionally
+int8 via ``cfg.kv_cache_dtype``) is paged so the serving memory path is
+bounded by live tokens, and the flash kernel consumes pages directly via
+its page-table index maps (no contiguous gather ever materializes).
+
+Device state is functional: jitted steps take the pool dict and return an
+updated one; only the free list / page tables live host-side.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+
+Array = jax.Array
+
+# Logical axes of the page pools (see sharding/rules.py: "pages" is
+# replicated by default; kv_heads shard over the model axis so each
+# device holds its heads' slice of every page).
+PAGED_KV_AXES = {
+    "k": ("layers", "pages", None, "kv_heads", "head_dim"),
+    "v": ("layers", "pages", None, "kv_heads", "head_dim"),
+}
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+class PagedKVCache:
+    """Fixed pool of KV pages + host-side page tables and free list."""
+
+    def __init__(self, cfg: ArchConfig, *, num_blocks: int,
+                 block_size: int = 16, max_seq_len: int = 512,
+                 dtype=None):
+        if num_blocks < 2:
+            raise ValueError("need >= 2 blocks (page 0 is the null page)")
+        from repro.models.layers import kv_store_dtype
+        self.cfg = cfg
+        self.block_size = block_size
+        self.num_blocks = num_blocks
+        self.max_blocks_per_seq = cdiv(max_seq_len, block_size)
+        self.max_seq_len = max_seq_len
+        dt = dtype or kv_store_dtype(cfg)
+        shape = (cfg.n_layers, num_blocks, block_size,
+                 cfg.n_kv_heads, cfg.head_dim)
+        self.pools: Dict[str, Array] = {"k": jnp.zeros(shape, dt),
+                                        "v": jnp.zeros(shape, dt)}
+        # LIFO free list; page 0 reserved as the null page.
+        self._free: List[int] = list(range(num_blocks - 1, 0, -1))
+        self._tables: Dict[int, List[int]] = {}
+        self.peak_blocks_in_use = 0
+
+    def shard(self, rules) -> None:
+        """Lay the pools out per the active sharding rules (PAGED_KV_AXES:
+        pages replicated, each page's kv_heads sliced over the model axis)."""
+        self.pools = {
+            name: jax.device_put(
+                pool, rules.sharding(PAGED_KV_AXES[name], pool.shape))
+            for name, pool in self.pools.items()
+        }
+
+    # -- accounting -----------------------------------------------------------
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def blocks_in_use(self) -> int:
+        return (self.num_blocks - 1) - len(self._free)
+
+    def utilization(self) -> float:
+        return self.blocks_in_use / max(self.num_blocks - 1, 1)
+
+    def blocks_for_tokens(self, num_tokens: int) -> int:
+        return cdiv(num_tokens, self.block_size)
+
+    def can_allocate(self, num_tokens: int) -> bool:
+        return self.blocks_for_tokens(num_tokens) <= self.free_blocks
+
+    # -- allocation -----------------------------------------------------------
+
+    def allocate(self, seq_id: int, num_tokens: int) -> bool:
+        """Reserve pages covering ``num_tokens`` for ``seq_id``.
+
+        All-or-nothing; returns False (no allocation) if the pool cannot
+        cover the request or the sequence would exceed max_seq_len.
+        """
+        n = self.blocks_for_tokens(num_tokens)
+        if seq_id in self._tables:
+            raise ValueError(f"seq {seq_id} already has pages")
+        if n > self.max_blocks_per_seq or n > self.free_blocks:
+            return False
+        self._tables[seq_id] = [self._free.pop() for _ in range(n)]
+        self.peak_blocks_in_use = max(self.peak_blocks_in_use,
+                                      self.blocks_in_use)
+        return True
+
+    def free_seq(self, seq_id: int) -> None:
+        """Return a finished sequence's pages to the pool."""
+        for blk in self._tables.pop(seq_id):
+            self._free.append(blk)
+
+    def table_row(self, seq_id: int) -> np.ndarray:
+        """(max_blocks_per_seq,) int32 page table, null-page padded."""
+        row = np.zeros((self.max_blocks_per_seq,), np.int32)
+        blocks = self._tables[seq_id]
+        row[:len(blocks)] = blocks
+        return row
+
+    def batch_tables(self, seq_ids: Sequence[Optional[int]]) -> np.ndarray:
+        """(len(seq_ids), max_blocks_per_seq) int32; None rows -> null."""
+        out = np.zeros((len(seq_ids), self.max_blocks_per_seq), np.int32)
+        for i, sid in enumerate(seq_ids):
+            if sid is not None:
+                out[i] = self.table_row(sid)
+        return out
+
+
+# -- functional device-side ops (used inside jitted model steps) --------------
+
+
+def write_tokens(pool: Array, kv: Array, block_ids: Array,
+                 offsets: Array) -> Array:
+    """Scatter token KV rows into one layer's page pool.
+
+    pool: (N, bs, KV, hd); kv: (B, C, KV, hd); block_ids/offsets: (B, C)
+    int32 page id / in-page slot per token (masked tokens aim at page 0).
+    """
+    return pool.at[block_ids, offsets].set(kv.astype(pool.dtype))
+
+
+def slots_for_positions(positions: Array, block_size: int,
+                        tables: Array):
+    """Map absolute positions (B, C) + tables (B, NB) -> (block_ids, offsets).
+
+    Positions are clamped into the table so padded/inactive lanes resolve
+    to a real entry (their table rows are all null page 0 anyway).
+    """
+    nb = tables.shape[1]
+    blk_idx = jnp.clip(positions // block_size, 0, nb - 1)
+    block_ids = jnp.take_along_axis(tables, blk_idx, axis=1)
+    offsets = positions % block_size
+    return block_ids, offsets
+
+
+def gather_kv(pool: Array, table: Array) -> Array:
+    """Reference path: gather one layer's pages to a contiguous cache.
+
+    pool: (N, bs, KV, hd); table: (B, NB) -> (B, NB*bs, KV, hd). Used by
+    the XLA fallback backend and by paged-vs-dense equivalence tests; the
+    Pallas backend never materializes this.
+    """
+    n, bs, kvh, hd = pool.shape
+    b, nb = table.shape
+    pages = jnp.take(pool, table.reshape(-1), axis=0)
+    return pages.reshape(b, nb * bs, kvh, hd)

@@ -1,0 +1,126 @@
+"""Admission/eviction scheduler: token-level continuous batching.
+
+Requests wait in a FIFO queue and are admitted the moment the page pool
+can cover their full footprint (prompt rounded up to the prefill-chunk
+boundary, plus max_new_tokens) — not when a batch slot opens. Finished
+sequences return their pages immediately, which can admit several queued
+requests mid-step. Long prompts are prefilled in fixed-size chunks, one
+chunk per engine step, so a 10k-token prompt interleaves with ongoing
+decode instead of stalling the batch (chunked prefill).
+
+The reservation is conservative (worst-case footprint at admission), so
+no mid-stream preemption/swapping is ever needed; eviction is exactly
+page reclamation at completion.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, List, Optional
+
+import numpy as np
+
+from repro.serve.kv_cache import PagedKVCache, cdiv
+
+
+@dataclasses.dataclass
+class Sequence:
+    """One in-flight request: prompt, progress, and output tokens."""
+    seq_id: int
+    prompt: np.ndarray                 # (prompt_len,) int32
+    max_new_tokens: int
+    prefilled: int = 0                 # prompt tokens already written
+    out: List[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def prompt_len(self) -> int:
+        return len(self.prompt)
+
+    @property
+    def in_prefill(self) -> bool:
+        return self.prefilled < self.prompt_len
+
+    @property
+    def done(self) -> bool:
+        return (not self.in_prefill
+                and len(self.out) >= self.max_new_tokens)
+
+
+class Scheduler:
+    """Pairs the waiting queue with the page pool."""
+
+    def __init__(self, cache: PagedKVCache, *, max_running: int,
+                 prefill_chunk: int):
+        self.cache = cache
+        self.max_running = max_running
+        self.prefill_chunk = prefill_chunk
+        self.waiting: Deque[Sequence] = deque()
+        self.running: List[Sequence] = []
+        self._next_id = 0
+        self.admitted = 0
+        self.finished = 0
+
+    def check_fits(self, prompt: np.ndarray, max_new_tokens: int) -> None:
+        """Raise if this request's footprint can never be allocated."""
+        seq = Sequence(-1, np.asarray(prompt, np.int32), max_new_tokens)
+        need = self.cache.blocks_for_tokens(self._footprint(seq))
+        limit = min(self.cache.max_blocks_per_seq,
+                    self.cache.num_blocks - 1)
+        if need > limit:
+            raise ValueError(
+                f"request footprint of {need} pages can never fit "
+                f"(per-seq/pool limit {limit})")
+
+    def submit(self, prompt: np.ndarray, max_new_tokens: int) -> int:
+        self.check_fits(prompt, max_new_tokens)
+        seq = Sequence(self._next_id, np.asarray(prompt, np.int32),
+                       max_new_tokens)
+        self._next_id += 1
+        self.waiting.append(seq)
+        return seq.seq_id
+
+    def _footprint(self, seq: Sequence) -> int:
+        """Worst-case tokens ever written for this sequence: the prompt
+        rounded up to the chunk boundary (padded final-chunk writes land
+        in-sequence), or prompt + generation, whichever is larger."""
+        padded_prompt = cdiv(seq.prompt_len, self.prefill_chunk) \
+            * self.prefill_chunk
+        return max(padded_prompt, seq.prompt_len + seq.max_new_tokens)
+
+    def admit(self) -> int:
+        """FIFO-admit waiting requests while pages + a lane are free."""
+        n = 0
+        while (self.waiting and len(self.running) < self.max_running
+               and self.cache.allocate(self.waiting[0].seq_id,
+                                       self._footprint(self.waiting[0]))):
+            self.running.append(self.waiting.popleft())
+            self.admitted += 1
+            n += 1
+        return n
+
+    def next_prefill(self) -> Optional[Sequence]:
+        """Oldest running sequence that still has prompt left to write."""
+        for seq in self.running:
+            if seq.in_prefill:
+                return seq
+        return None
+
+    def decode_batch(self, limit: int) -> List[Sequence]:
+        """Up to ``limit`` running sequences ready to decode a token.
+
+        Excludes finished sequences: a request whose budget is already
+        met (e.g. max_new_tokens=1 satisfied by the prefill logits) must
+        not decode in the step that completed its prefill.
+        """
+        return [s for s in self.running
+                if not s.in_prefill and not s.done][:limit]
+
+    def finish(self, seq: Sequence) -> None:
+        """Reclaim pages; freed pages make room for the next admit()."""
+        self.running.remove(seq)
+        self.cache.free_seq(seq.seq_id)
+        self.finished += 1
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.running)

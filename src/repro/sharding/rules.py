@@ -35,6 +35,9 @@ DEFAULT_RULES = {
     "layers": (),
     "conv": (),
     "stats": (),
+    # serve-time paged KV pool: pages replicate (any device can host any
+    # sequence's pages); the kv_heads dim of each page shards over model.
+    "pages": (),
 }
 
 
@@ -88,7 +91,7 @@ FSDP_RULES = {
     "batch": ("pod", "data", "model"),
     "seq": (), "embed": (), "heads": (), "kv_heads": (), "head_dim": (),
     "ff": (), "vocab": (), "experts": ("data",), "expert_ff": (),
-    "layers": (), "conv": (), "stats": (),
+    "layers": (), "conv": (), "stats": (), "pages": (),
 }
 
 

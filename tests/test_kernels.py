@@ -1,5 +1,4 @@
 """Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret=True)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -84,6 +83,144 @@ def test_flash_sole_multiblock_close(rng, kv_heads, block):
     ref = jnp.moveaxis(ref.reshape(B, H, S, hd), 1, 2)
     # online quantized corrections deviate elementwise; mean stays tight
     assert float(jnp.mean(jnp.abs(out - ref))) < 0.02
+
+
+@pytest.mark.parametrize("shape", [(40, 96), (96, 40), (57, 57), (33, 70)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_rectangular_and_ragged_shapes(rng, shape, causal):
+    """Parity on S != T and non-multiple-of-block shapes (exact mode)."""
+    from repro.kernels.flash_e2softmax import flash_e2softmax_pallas
+    s, t = shape
+    bh, hd = 4, 16
+    q = jnp.asarray(rng.normal(0, 1, (bh, s, hd)).astype(np.float32))
+    k = jnp.asarray(rng.normal(0, 1, (bh, t, hd)).astype(np.float32))
+    v = jnp.asarray(rng.normal(0, 1, (bh, t, hd)).astype(np.float32))
+    out = flash_e2softmax_pallas(q, k, v, causal=causal, sole=False,
+                                 block_q=16, block_k=16)
+    ref = K.flash_e2softmax_ref(q, k, v, causal=causal, sole=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_flash_sole_ragged_single_block_bit_exact(rng):
+    """Non-multiple shape padded into one block still reduces to the
+    two-pass reference exactly (padding is fully masked)."""
+    from repro.kernels.flash_e2softmax import flash_e2softmax_pallas
+    bh, s, hd = 4, 57, 16
+    q, k, v = (jnp.asarray(rng.normal(0, 1, (bh, s, hd)).astype(np.float32))
+               for _ in range(3))
+    out = flash_e2softmax_pallas(q, k, v, causal=True, sole=True,
+                                 block_q=64, block_k=64)
+    ref = K.flash_e2softmax_ref(q, k, v, causal=True, sole=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def _page_pool(rng, n, bs, kv, hd):
+    kp = jnp.asarray(rng.normal(0, 1, (n, bs, kv, hd)).astype(np.float32))
+    vp = jnp.asarray(rng.normal(0, 1, (n, bs, kv, hd)).astype(np.float32))
+    return kp, vp
+
+
+def _gather(pool, table, t):
+    """Host-side oracle gather: pages -> contiguous (t, KV, hd)."""
+    pages = np.concatenate([np.asarray(pool)[p] for p in table], 0)
+    return pages[:t]
+
+
+@pytest.mark.parametrize("ctx", [5, 11, 16])
+def test_paged_decode_matches_gathered_ref(rng, ctx):
+    """flash_e2softmax_paged_decode == gather + two-pass ref (exact)."""
+    from repro.kernels.flash_e2softmax import flash_e2softmax_paged_decode
+    n, bs, kv, hd, h, b = 12, 4, 2, 16, 4, 3
+    kp, vp = _page_pool(rng, n, bs, kv, hd)
+    tables = np.array([[3, 1, 6, 2], [5, 2, 7, 9], [10, 4, 8, 11]], np.int32)
+    ctxs = np.minimum(np.array([ctx, ctx + 1, ctx - 1]), bs * 4)
+    q = jnp.asarray(rng.normal(0, 1, (b, h, hd)).astype(np.float32))
+    out = flash_e2softmax_paged_decode(q, kp, vp, jnp.asarray(tables),
+                                       jnp.asarray(ctxs), sole=False)
+    for i in range(b):
+        kk = _gather(kp, tables[i], ctxs[i])
+        vv = _gather(vp, tables[i], ctxs[i])
+        for hh in range(h):
+            g = h // kv
+            ref = K.flash_e2softmax_ref(
+                np.asarray(q)[i, hh][None, None], kk[None, :, hh // g],
+                vv[None, :, hh // g], causal=False, sole=False)
+            np.testing.assert_allclose(np.asarray(out)[i, hh],
+                                       np.asarray(ref)[0, 0],
+                                       rtol=1e-5, atol=1e-5)
+
+
+def test_paged_decode_sole_single_page_bit_exact(rng):
+    """Context inside one page: the online paged pipeline reduces to the
+    two-pass E2Softmax reference exactly."""
+    from repro.kernels.flash_e2softmax import flash_e2softmax_paged_decode
+    n, bs, kv, hd, h = 8, 16, 2, 16, 4
+    kp, vp = _page_pool(rng, n, bs, kv, hd)
+    tables = np.array([[3, 0], [5, 0]], np.int32)
+    ctxs = np.array([9, 14], np.int32)
+    q = jnp.asarray(rng.normal(0, 1, (2, h, hd)).astype(np.float32))
+    out = flash_e2softmax_paged_decode(q, kp, vp, jnp.asarray(tables),
+                                       jnp.asarray(ctxs), sole=True)
+    for i in range(2):
+        kk = _gather(kp, tables[i], ctxs[i])
+        vv = _gather(vp, tables[i], ctxs[i])
+        for hh in range(h):
+            g = h // kv
+            ref = K.flash_e2softmax_ref(
+                np.asarray(q)[i, hh][None, None], kk[None, :, hh // g],
+                vv[None, :, hh // g], causal=False, sole=True)
+            np.testing.assert_array_equal(np.asarray(out)[i, hh],
+                                          np.asarray(ref)[0, 0])
+
+
+def test_paged_prefill_chunk_matches_gathered_ref(rng):
+    """Causal chunk attention through page tables == contiguous ref with
+    the chunk's rows offset by q_start (exact mode)."""
+    from repro.kernels.flash_e2softmax import flash_e2softmax_paged
+    n, bs, kv, hd, h, c, q0 = 12, 4, 2, 16, 4, 8, 6
+    kp, vp = _page_pool(rng, n, bs, kv, hd)
+    table = np.array([[3, 1, 6, 2]], np.int32)
+    kv_len = q0 + c
+    q = jnp.asarray(rng.normal(0, 1, (1, h, c, hd)).astype(np.float32))
+    meta = jnp.asarray(np.array([[q0, kv_len]], np.int32))
+    out = flash_e2softmax_paged(q, kp, vp, jnp.asarray(table), meta,
+                                causal=True, sole=False)
+    kk = _gather(kp, table[0], kv_len)
+    vv = _gather(vp, table[0], kv_len)
+    for hh in range(h):
+        g = h // kv
+        # full causal attention over kv_len rows; our chunk is the last c.
+        qq = np.zeros((kv_len, hd), np.float32)
+        qq[q0:] = np.asarray(q)[0, hh]
+        ref = K.flash_e2softmax_ref(qq[None], kk[None, :, hh // g],
+                                    vv[None, :, hh // g],
+                                    causal=True, sole=False)
+        np.testing.assert_allclose(np.asarray(out)[0, hh],
+                                   np.asarray(ref)[0, q0:],
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_paged_int8_pool_dequant(rng):
+    """int8 page pools dequantize inside the kernel via kv_scale."""
+    from repro.kernels.flash_e2softmax import flash_e2softmax_paged_decode
+    from repro.models.layers import KV_INT8_SCALE
+    n, bs, kv, hd, h = 8, 8, 2, 16, 4
+    kp, vp = _page_pool(rng, n, bs, kv, hd)
+    kq = jnp.clip(jnp.round(kp / KV_INT8_SCALE), -127, 127).astype(jnp.int8)
+    vq = jnp.clip(jnp.round(vp / KV_INT8_SCALE), -127, 127).astype(jnp.int8)
+    tables = np.array([[3, 1]], np.int32)
+    ctxs = np.array([13], np.int32)
+    q = jnp.asarray(rng.normal(0, 1, (1, h, hd)).astype(np.float32))
+    out_q = flash_e2softmax_paged_decode(
+        q, kq, vq, jnp.asarray(tables), jnp.asarray(ctxs), sole=False,
+        kv_scale=KV_INT8_SCALE)
+    out_f = flash_e2softmax_paged_decode(
+        q, kq.astype(jnp.float32) * KV_INT8_SCALE,
+        vq.astype(jnp.float32) * KV_INT8_SCALE,
+        jnp.asarray(tables), jnp.asarray(ctxs), sole=False)
+    np.testing.assert_allclose(np.asarray(out_q), np.asarray(out_f),
+                               rtol=1e-6, atol=1e-6)
 
 
 def test_flash_exact_corr_beyond_paper(rng):

@@ -1,7 +1,6 @@
 """Logical-axis rules: divisibility fallback + ZeRO-1 spec (no mesh exec)."""
 import jax
 import numpy as np
-import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.sharding.rules import DEFAULT_RULES, Rules, zero1_spec

@@ -1,15 +1,12 @@
 """AILayerNorm / dynamic compression tests (paper §III-C)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from tests._hypothesis_compat import given, settings, st
 
 from repro.core.nonlin import layernorm_fn, rmsnorm_fn
-from repro.core.sole.ailayernorm import (ailayernorm, airmsnorm,
-                                         compressed_square, dynamic_compress,
-                                         rsqrt_lut)
+from repro.core.sole.ailayernorm import (ailayernorm, compressed_square,
+                                         dynamic_compress, rsqrt_lut)
 from repro.core.sole.quant import calibrate_ptf
 
 
