@@ -78,6 +78,11 @@ class ArchConfig:
     train_norm_mode: str = "exact"
     logit_int8: bool = True           # int8-snap attention logits (paper)
     exp_bits: int = 4                 # E2Softmax log2-quant width
+    # Execution backend for softmax/norm/attention ops (repro.ops):
+    # auto = pallas where compiled Pallas is available (TPU), reference
+    # elsewhere; reference | pallas force one engine (mode semantics are
+    # never changed by the backend, only the execution path).
+    ops_backend: str = "auto"
 
     # Numerics / performance
     dtype: str = "bfloat16"

@@ -1,15 +1,15 @@
-"""Registry of softmax / norm implementations, selectable per config.
+"""Back-compat shim over the ``repro.ops`` registry.
 
-The model zoo calls :func:`softmax_fn` / :func:`layernorm_fn` /
-:func:`rmsnorm_fn` with a mode string so that the SOLE technique (and its
-baselines) are first-class, swappable features — the "no retraining"
-property is exercised by training with ``exact`` and serving with ``sole``.
+The per-mode dispatch that used to live here folded into
+``repro.ops`` (one ``(op, mode, backend)`` registry spanning the pure
+jnp references *and* the Pallas kernels). These helpers pin
+``backend="reference"`` to preserve the historical semantics for
+notebooks, benchmarks and examples; model and serve code imports
+``repro.ops`` directly and gets config-driven backend resolution.
 
 Modes:
   exact      fp32 softmax / LayerNorm (ground truth)
   sole       E2Softmax / AILayerNorm (the paper)
-  sole_pack  E2Softmax returning the packed (k, q) uint8 code domain for
-             the P@V contraction (storage-faithful int path)
   softermax  base-2 16-bit fixed-point softmax [20] (softmax only)
   ibert      INT32 integer-only softmax / LayerNorm [21]
 """
@@ -17,73 +17,20 @@ from __future__ import annotations
 
 from typing import Callable
 
-import jax
-import jax.numpy as jnp
-
-from repro.core.baselines.ibert import i_layernorm, i_softmax
-from repro.core.baselines.softermax import softermax
-from repro.core.sole.ailayernorm import ailayernorm, airmsnorm
-from repro.core.sole.e2softmax import e2softmax
-
-Array = jax.Array
-
-SOFTMAX_MODES = ("exact", "sole", "softermax", "ibert")
-NORM_MODES = ("exact", "sole", "ibert")
+from repro.ops import NORM_MODES, SOFTMAX_MODES  # noqa: F401 (re-export)
+from repro.ops import registry as _registry
 
 
-def _exact_softmax(x, *, axis=-1, mask=None):
-    if mask is not None:
-        x = jnp.where(mask, x, jnp.finfo(jnp.float32).min)
-    out = jax.nn.softmax(x.astype(jnp.float32), axis=axis)
-    if mask is not None:
-        out = jnp.where(mask, out, 0.0)
-    return out
-
-
-def softmax_fn(mode: str) -> Callable[..., Array]:
+def softmax_fn(mode: str) -> Callable:
     """Returns softmax(x, axis=-1, mask=None) for the given mode."""
-    if mode == "exact":
-        return _exact_softmax
-    if mode == "sole":
-        return e2softmax
-    if mode == "softermax":
-        return softermax
-    if mode == "ibert":
-        return i_softmax
-    raise ValueError(f"unknown softmax mode: {mode!r}")
+    return _registry.resolve("softmax", mode, "reference")
 
 
-def _exact_layernorm(x, gamma, beta, *, eps=1e-5):
-    x = x.astype(jnp.float32)
-    mu = jnp.mean(x, axis=-1, keepdims=True)
-    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
-    return (x - mu) * jax.lax.rsqrt(var + eps) * gamma + beta
-
-
-def _exact_rmsnorm(x, gamma, *, eps=1e-6):
-    x = x.astype(jnp.float32)
-    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
-    return x * jax.lax.rsqrt(ms + eps) * gamma
-
-
-def layernorm_fn(mode: str) -> Callable[..., Array]:
+def layernorm_fn(mode: str) -> Callable:
     """Returns layernorm(x, gamma, beta) for the given mode."""
-    if mode == "exact":
-        return _exact_layernorm
-    if mode == "sole":
-        return lambda x, g, b, **kw: ailayernorm(x, g, b)
-    if mode == "ibert":
-        return lambda x, g, b, **kw: i_layernorm(x, g, b)
-    raise ValueError(f"unknown layernorm mode: {mode!r}")
+    return _registry.resolve("layernorm", mode, "reference")
 
 
-def rmsnorm_fn(mode: str) -> Callable[..., Array]:
+def rmsnorm_fn(mode: str) -> Callable:
     """Returns rmsnorm(x, gamma) for the given mode."""
-    if mode == "exact":
-        return _exact_rmsnorm
-    if mode == "sole":
-        return lambda x, g, **kw: airmsnorm(x, g)
-    if mode == "ibert":
-        # I-BERT has no RMSNorm; reuse its LN path with beta=0, mean kept.
-        return lambda x, g, **kw: i_layernorm(x, g, jnp.zeros_like(g))
-    raise ValueError(f"unknown rmsnorm mode: {mode!r}")
+    return _registry.resolve("rmsnorm", mode, "reference")

@@ -1,10 +1,23 @@
-"""Pallas TPU kernel: AILayerNorm (SOLE integer statistics + affine).
+"""Pallas TPU kernels: AILayerNorm (SOLE integer statistics + affine) and
+the fused residual-add + PTF-quantize + AILayerNorm serve-path kernel.
 
-Input is the centered 8-bit code ``xi = x_q - zp`` (int32 carrier); the
-kernel performs dynamic compression, the y(y+1) 16-entry-LUT square, PTF
-shifts, int32 reductions, rsqrt and the fused affine — one pass, the
-statistics never leave VMEM (the ASIC's Stage1/Stage2 ping-pong collapses
-into a single resident tile).
+:func:`ailayernorm_pallas` / :func:`airmsnorm_pallas` take fp32
+activations and are call-compatible with the reference norm ops — PTF
+quantization and centering happen inside the kernel tile, one pass
+(``ailayernorm_pallas_codes`` keeps the raw centered-code entry point
+for the bit-exact oracle tests). The kernel performs dynamic
+compression, the y(y+1) 16-entry-LUT square, PTF shifts, int32
+reductions, rsqrt and the fused affine — one pass, the statistics never
+leave VMEM (the ASIC's Stage1/Stage2 ping-pong collapses into a single
+resident tile).
+
+:func:`fused_add_norm_pallas` extends the same tile with the producer:
+the residual stream ``x`` and the sublayer output ``r`` are read once,
+``h = x + r`` is written back (the next residual carry) and PTF
+quantization + integer statistics + affine run on ``h`` while it is
+VMEM-resident — SOLE-mode norm calls stop round-tripping through three
+separate HBM-bound jnp ops. ``rms=True`` selects the AIRMSNorm variant
+(no mean term, symmetric codes).
 
 Rows are blocked; the channel axis stays whole in VMEM (C up to ~8k fits
 easily: block_rows x C x 4B).
@@ -12,23 +25,36 @@ easily: block_rows x C x 4B).
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.sole.quant import PTFQuantParams, calibrate_ptf
+from repro.ops.interpret import resolve_interpret
 
-def _kernel(xi_ref, alpha_ref, gamma_ref, beta_ref, o_ref):
-    xi = xi_ref[...]                                    # (br, C) int32
-    c = xi.shape[-1]
-    alpha = alpha_ref[...]                              # (1, C) int32
+
+def _stats(xi, alpha):
+    """Shared integer pipeline: DynamicCompress square + PTF shifts.
+
+    Returns (xs, ex2): the PTF-restored codes and the accumulated
+    compressed squares (both int32; ex2 carries x^2/16 per Alg. 2).
+    """
     a = jnp.abs(xi)
     s = (a >= 64).astype(jnp.int32)
     y = jnp.where(s == 1, a >> 4, a >> 2)
     sq = (y * y + y) << (4 * s)                         # 16-entry LUT in HW
     xs = xi << alpha
-    ex = jnp.sum(xs, axis=-1, keepdims=True)
     ex2 = jnp.sum(sq << (2 * alpha), axis=-1, keepdims=True)
+    return xs, ex2
+
+
+def _kernel(xi_ref, alpha_ref, gamma_ref, beta_ref, o_ref):
+    xi = xi_ref[...]                                    # (br, C) int32
+    c = xi.shape[-1]
+    xs, ex2 = _stats(xi, alpha_ref[...])
+    ex = jnp.sum(xs, axis=-1, keepdims=True)
     mu = ex.astype(jnp.float32) / c
     var = jnp.maximum(ex2.astype(jnp.float32) * 16.0 / c - mu * mu, 1.0)
     std_inv = jax.lax.rsqrt(var)
@@ -36,15 +62,18 @@ def _kernel(xi_ref, alpha_ref, gamma_ref, beta_ref, o_ref):
                   * (xs.astype(jnp.float32) - mu) + beta_ref[...])
 
 
-@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
-def ailayernorm_pallas(xi, alpha, gamma, beta, *, block_rows: int = 256,
-                       interpret: bool = True):
-    """xi (..., C) int32 centered codes; alpha (C,) int32; gamma/beta (C,)."""
-    shape = xi.shape
-    c = shape[-1]
+def _rows(shape):
     rows = 1
     for d in shape[:-1]:
         rows *= d
+    return rows
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def _codes_call(xi, alpha, gamma, beta, block_rows: int, interpret: bool):
+    shape = xi.shape
+    c = shape[-1]
+    rows = _rows(shape)
     x2 = xi.reshape(rows, c)
     br = min(block_rows, rows)
     pad = (-rows) % br
@@ -68,3 +97,177 @@ def ailayernorm_pallas(xi, alpha, gamma, beta, *, block_rows: int = 256,
     if pad:
         out = out[:rows]
     return out.reshape(shape)
+
+
+def ailayernorm_pallas_codes(xi, alpha, gamma, beta, *,
+                             block_rows: int = 256,
+                             interpret: Optional[bool] = None):
+    """xi (..., C) int32 centered codes ``x_q - zp``; alpha (C,) int32."""
+    return _codes_call(xi, alpha, gamma, beta, block_rows,
+                       resolve_interpret(interpret))
+
+
+# -- single-pass quantize + norm (fp32 in, PTF centering in-kernel) -----------
+
+
+def _quant_norm(h, denom, alpha, gamma, beta, rms: bool):
+    """Shared tile body: PTF quantize fp32 ``h`` and normalize.
+
+    Quantize + center in one clip: for both the unsigned (zp=128) and
+    symmetric (zp=0) code spaces, x_q - zp == clip(round(h/denom),
+    -128, 127) with denom = s * 2^alpha per channel.
+    """
+    c = h.shape[-1]
+    xi = jnp.clip(jnp.round(h / denom), -128, 127).astype(jnp.int32)
+    xs, ex2 = _stats(xi, alpha)
+    if rms:
+        ms = jnp.maximum(ex2.astype(jnp.float32) * 16.0 / c, 1.0)
+        return gamma * xs.astype(jnp.float32) * jax.lax.rsqrt(ms)
+    ex = jnp.sum(xs, axis=-1, keepdims=True)
+    mu = ex.astype(jnp.float32) / c
+    var = jnp.maximum(ex2.astype(jnp.float32) * 16.0 / c - mu * mu, 1.0)
+    return (gamma * jax.lax.rsqrt(var)
+            * (xs.astype(jnp.float32) - mu) + beta)
+
+
+def _qnorm_kernel(x_ref, denom_ref, alpha_ref, gamma_ref, beta_ref, o_ref,
+                  *, rms: bool):
+    o_ref[...] = _quant_norm(x_ref[...], denom_ref[...], alpha_ref[...],
+                             gamma_ref[...], beta_ref[...], rms)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("rms", "block_rows", "interpret"))
+def _qnorm_call(x, denom, alpha, gamma, beta, rms: bool, block_rows: int,
+                interpret: bool):
+    shape = x.shape
+    c = shape[-1]
+    rows = _rows(shape)
+    x2 = x.reshape(rows, c).astype(jnp.float32)
+    br = min(block_rows, rows)
+    pad = (-rows) % br
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    blk = pl.BlockSpec((br, c), lambda i: (i, 0))
+    chan = pl.BlockSpec((1, c), lambda i: (0, 0))
+    out = pl.pallas_call(
+        functools.partial(_qnorm_kernel, rms=rms),
+        out_shape=jax.ShapeDtypeStruct(x2.shape, jnp.float32),
+        grid=((rows + pad) // br,),
+        in_specs=[blk, chan, chan, chan, chan],
+        out_specs=blk,
+        interpret=interpret,
+    )(x2, denom.reshape(1, c).astype(jnp.float32),
+      alpha.reshape(1, c).astype(jnp.int32),
+      gamma.reshape(1, c).astype(jnp.float32),
+      beta.reshape(1, c).astype(jnp.float32))
+    if pad:
+        out = out[:rows]
+    return out.reshape(shape)
+
+
+def _ptf_denom(params: PTFQuantParams):
+    return params.scale * jnp.exp2(params.alpha.astype(jnp.float32))
+
+
+def ailayernorm_pallas(x, gamma, beta, *,
+                       params: Optional[PTFQuantParams] = None,
+                       block_rows: int = 256,
+                       interpret: Optional[bool] = None):
+    """AILayerNorm on fp32 activations (call-compatible with the
+    reference ``layernorm`` op): PTF quantization, centering, integer
+    statistics and affine all happen in one kernel pass.
+
+    ``params=None`` calibrates PTF on the fly (per-call min/max — models
+    a calibration pass; serving passes precomputed params).
+    """
+    if params is None:
+        params = calibrate_ptf(x, unsigned=True)
+    return _qnorm_call(x, _ptf_denom(params), params.alpha, gamma, beta,
+                       False, block_rows, resolve_interpret(interpret))
+
+
+def airmsnorm_pallas(x, gamma, *,
+                     params: Optional[PTFQuantParams] = None,
+                     block_rows: int = 256,
+                     interpret: Optional[bool] = None):
+    """AIRMSNorm (symmetric codes, no mean term) in one kernel pass."""
+    if params is None:
+        params = calibrate_ptf(x, unsigned=False)
+    return _qnorm_call(x, _ptf_denom(params), params.alpha, gamma,
+                       jnp.zeros_like(gamma), True, block_rows,
+                       resolve_interpret(interpret))
+
+
+# -- fused residual-add + PTF quantize + AILayerNorm --------------------------
+
+
+def _fused_kernel(x_ref, r_ref, denom_ref, alpha_ref, gamma_ref, beta_ref,
+                  sum_ref, o_ref, *, rms: bool):
+    h = x_ref[...] + r_ref[...]                         # (br, C) fp32
+    sum_ref[...] = h                                    # the residual carry
+    o_ref[...] = _quant_norm(h, denom_ref[...], alpha_ref[...],
+                             gamma_ref[...], beta_ref[...], rms)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("rms", "block_rows", "interpret"))
+def _fused_call(x, r, denom, alpha, gamma, beta, rms: bool,
+                block_rows: int, interpret: bool):
+    shape = x.shape
+    c = shape[-1]
+    rows = _rows(shape)
+    x2 = x.reshape(rows, c).astype(jnp.float32)
+    r2 = r.reshape(rows, c).astype(jnp.float32)
+    br = min(block_rows, rows)
+    pad = (-rows) % br
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+        r2 = jnp.pad(r2, ((0, pad), (0, 0)))
+    blk = pl.BlockSpec((br, c), lambda i: (i, 0))
+    chan = pl.BlockSpec((1, c), lambda i: (0, 0))
+    out_shape = jax.ShapeDtypeStruct(x2.shape, jnp.float32)
+    h, out = pl.pallas_call(
+        functools.partial(_fused_kernel, rms=rms),
+        out_shape=(out_shape, out_shape),
+        grid=((rows + pad) // br,),
+        in_specs=[blk, blk, chan, chan, chan, chan],
+        out_specs=(blk, blk),
+        interpret=interpret,
+    )(x2, r2, denom.reshape(1, c).astype(jnp.float32),
+      alpha.reshape(1, c).astype(jnp.int32),
+      gamma.reshape(1, c).astype(jnp.float32),
+      beta.reshape(1, c).astype(jnp.float32))
+    if pad:
+        h, out = h[:rows], out[:rows]
+    return h.reshape(shape), out.reshape(shape)
+
+
+def fused_add_norm_pallas(x, r, gamma, beta=None, *,
+                          params: Optional[PTFQuantParams] = None,
+                          rms: bool = False, block_rows: int = 256,
+                          interpret: Optional[bool] = None):
+    """One VMEM-resident pass of ``h = x + r; AILayerNorm(h)``.
+
+    Returns ``(h, norm_out)`` — the fp32 residual carry and the
+    normalized output, matching the unfused reference
+    ``(x + r, ailayernorm(x + r))`` to fp32 tolerance.
+
+    With static ``params`` (the serving configuration) the add, PTF
+    quantize, statistics and affine are one kernel and the activations
+    are read exactly once. ``params=None`` models the calibration pass:
+    it must materialize ``h = x + r`` for the per-channel amax anyway,
+    so the sum happens in XLA once and the quantize+norm kernel
+    consumes ``h`` in a single pass (never the add twice).
+    """
+    if beta is None:
+        beta = jnp.zeros_like(gamma)
+    interp = resolve_interpret(interpret)
+    if params is None:
+        h = x + r
+        params = calibrate_ptf(h, unsigned=not rms)
+        out = _qnorm_call(h, _ptf_denom(params), params.alpha, gamma,
+                          beta, rms, block_rows, interp)
+        return h.astype(jnp.float32), out
+    return _fused_call(x, r, _ptf_denom(params), params.alpha, gamma, beta,
+                       rms, block_rows, interp)

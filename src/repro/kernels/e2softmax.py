@@ -6,6 +6,11 @@ probabilities, vs the two-stage HBM round trip of an unfused softmax.
 The 4-bit log2 codes exist only inside VMEM, playing the role of the
 paper's 4-bit intermediate buffer (DESIGN.md §2).
 
+Masking (the attention use case) streams a second operand through the
+same tile: masked entries contribute exactly zero to S and to the
+output — equivalent to the hardware simply not streaming those elements
+through the unit, and matching the reference ``e2softmax`` semantics.
+
 Block shape defaults keep the working set well inside the ~128 MB v5e
 VMEM budget per core and the lane dim a multiple of 128 for the VPU.
 """
@@ -19,6 +24,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.sole.e2softmax import ALDIV_BIAS, INV_LN2_SHIFT_APPROX
+from repro.ops.interpret import resolve_interpret
 
 
 def _kernel(x_ref, o_ref, *, exp_bits: int, int8_scale: Optional[float]):
@@ -39,12 +45,32 @@ def _kernel(x_ref, o_ref, *, exp_bits: int, int8_scale: Optional[float]):
     o_ref[...] = jnp.exp2(-(k + expo.astype(jnp.float32))) * factor
 
 
+def _masked_kernel(x_ref, mask_ref, o_ref, *, exp_bits: int,
+                   int8_scale: Optional[float]):
+    x = x_ref[...].astype(jnp.float32)
+    keep = mask_ref[...] != 0
+    neg = jnp.float32(jnp.finfo(jnp.float32).min)
+    xm = jnp.where(keep, x, neg)
+    m = jnp.max(xm, axis=-1, keepdims=True)
+    m = jnp.maximum(m, neg / 2)        # guard fully-masked rows
+    d = xm - m
+    if int8_scale is not None:
+        d = jnp.clip(jnp.round(d / int8_scale), -127, 0) * int8_scale
+    k = jnp.clip(jnp.round(-d * INV_LN2_SHIFT_APPROX),
+                 0.0, float(2 ** exp_bits - 1))
+    p = jnp.where(keep, jnp.exp2(-k), 0.0)
+    s = jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 2.0 ** -30)
+    mant, expo = jnp.frexp(s)
+    factor = jnp.where(mant >= 0.75, ALDIV_BIAS - 0.5, ALDIV_BIAS)
+    out = jnp.exp2(-(k + expo.astype(jnp.float32))) * factor
+    o_ref[...] = jnp.where(keep, out, 0.0)
+
+
 @functools.partial(jax.jit, static_argnames=("exp_bits", "int8_scale",
-                                             "block_rows", "interpret"))
-def e2softmax_pallas(x, *, exp_bits: int = 4,
-                     int8_scale: Optional[float] = None,
-                     block_rows: int = 256, interpret: bool = True):
-    """E2Softmax over the last axis of ``x`` (any leading dims)."""
+                                             "has_mask", "block_rows",
+                                             "interpret"))
+def _e2softmax_call(x, mask, exp_bits: int, int8_scale: Optional[float],
+                    has_mask: bool, block_rows: int, interpret: bool):
     shape = x.shape
     c = shape[-1]
     rows = 1
@@ -55,14 +81,44 @@ def e2softmax_pallas(x, *, exp_bits: int = 4,
     pad = (-rows) % br
     if pad:
         x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    blk = pl.BlockSpec((br, c), lambda i: (i, 0))
+    operands = [x2]
+    if has_mask:
+        m2 = mask.reshape(rows, c).astype(jnp.int32)
+        if pad:
+            m2 = jnp.pad(m2, ((0, pad), (0, 0)))
+        operands.append(m2)
+        kern = functools.partial(_masked_kernel, exp_bits=exp_bits,
+                                 int8_scale=int8_scale)
+    else:
+        kern = functools.partial(_kernel, exp_bits=exp_bits,
+                                 int8_scale=int8_scale)
     out = pl.pallas_call(
-        functools.partial(_kernel, exp_bits=exp_bits, int8_scale=int8_scale),
+        kern,
         out_shape=jax.ShapeDtypeStruct(x2.shape, jnp.float32),
         grid=((rows + pad) // br,),
-        in_specs=[pl.BlockSpec((br, c), lambda i: (i, 0))],
-        out_specs=pl.BlockSpec((br, c), lambda i: (i, 0)),
+        in_specs=[blk] * len(operands),
+        out_specs=blk,
         interpret=interpret,
-    )(x2)
+    )(*operands)
     if pad:
         out = out[:rows]
     return out.reshape(shape)
+
+
+def e2softmax_pallas(x, *, exp_bits: int = 4,
+                     int8_scale: Optional[float] = None,
+                     mask=None, block_rows: int = 256,
+                     interpret: Optional[bool] = None):
+    """E2Softmax over the last axis of ``x`` (any leading dims).
+
+    ``mask`` (optional, broadcastable to ``x.shape``, True = keep)
+    selects the masked kernel variant; masked entries produce exact 0.
+    """
+    has_mask = mask is not None
+    if has_mask:
+        mask = jnp.broadcast_to(mask, x.shape)
+    else:
+        mask = jnp.zeros((), jnp.int32)  # placeholder, not streamed
+    return _e2softmax_call(x, mask, exp_bits, int8_scale, has_mask,
+                           block_rows, resolve_interpret(interpret))

@@ -29,6 +29,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.sole.e2softmax import ALDIV_BIAS, INV_LN2_SHIFT_APPROX
+from repro.ops.interpret import resolve_interpret
 
 NEG = -1e30
 LOG2E = 1.4426950408889634
@@ -136,8 +137,10 @@ def flash_e2softmax_pallas(q, k, v, *, causal: bool = True,
                            sole: bool = True, exp_bits: int = 4,
                            int8_scale: Optional[float] = None,
                            block_q: int = 128, block_k: int = 128,
-                           interpret: bool = True, exact_corr: bool = False):
+                           interpret: Optional[bool] = None,
+                           exact_corr: bool = False):
     """Fused attention. q,k,v: (BH, S, d) (fold batch*heads outside)."""
+    interpret = resolve_interpret(interpret)
     bh, s, d = q.shape
     t = k.shape[1]
     bq = min(block_q, s)
@@ -253,7 +256,7 @@ def flash_e2softmax_paged(q, k_pool, v_pool, tables, meta, *,
                           exp_bits: int = 4,
                           int8_scale: Optional[float] = None,
                           exact_corr: bool = False,
-                          interpret: bool = True,
+                          interpret: Optional[bool] = None,
                           kv_scale: Optional[float] = None):
     """Fused attention over a block-paged KV pool.
 
@@ -270,6 +273,7 @@ def flash_e2softmax_paged(q, k_pool, v_pool, tables, meta, *,
 
     Returns (B, H, C, d) float32.
     """
+    interpret = resolve_interpret(interpret)
     bsz, h, c, d = q.shape
     n, bs, kvh, _ = k_pool.shape
     nb = tables.shape[1]
@@ -309,7 +313,7 @@ def flash_e2softmax_paged_decode(q, k_pool, v_pool, tables, ctx_lens, *,
                                  sole: bool = True, exp_bits: int = 4,
                                  int8_scale: Optional[float] = None,
                                  exact_corr: bool = False,
-                                 interpret: bool = True,
+                                 interpret: Optional[bool] = None,
                                  kv_scale: Optional[float] = None):
     """Single-query decode fast path over the paged pool.
 

@@ -1,9 +1,14 @@
 """jit'd public wrappers around the Pallas kernels.
 
-``interpret=True`` (default here) executes the kernel bodies in Python on
-CPU — the TPU path just flips the flag. The wrappers handle layout
-folding (batch*heads), GQA broadcast, and PTF centering so callers pass
-model-layout tensors.
+``interpret=None`` (default) autodetects: compiled lowering on TPU,
+interpret mode (kernel bodies in Python) everywhere else — the same
+call sites work on TPU, GPU dev boxes, and CPU tests. The wrappers
+handle layout folding (batch*heads), GQA broadcast, and PTF centering
+so callers pass model-layout tensors.
+
+Model and serve code does not import this module directly — it resolves
+implementations through the ``repro.ops`` registry, which routes here
+for the pallas backend.
 """
 from __future__ import annotations
 
@@ -12,8 +17,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.sole.quant import PTFQuantParams, calibrate_ptf
-from repro.kernels.ailayernorm import ailayernorm_pallas
+from repro.core.sole.quant import PTFQuantParams
+from repro.kernels.ailayernorm import ailayernorm_pallas, fused_add_norm_pallas
 from repro.kernels.e2softmax import e2softmax_pallas
 from repro.kernels.flash_e2softmax import flash_e2softmax_pallas
 
@@ -21,29 +26,35 @@ Array = jax.Array
 
 
 def e2softmax_op(x: Array, *, exp_bits: int = 4,
-                 int8_scale: Optional[float] = None,
-                 interpret: bool = True) -> Array:
+                 int8_scale: Optional[float] = None, mask=None,
+                 interpret: Optional[bool] = None) -> Array:
     """Drop-in softmax replacement over the last axis."""
     return e2softmax_pallas(x, exp_bits=exp_bits, int8_scale=int8_scale,
-                            interpret=interpret)
+                            mask=mask, interpret=interpret)
 
 
 def ailayernorm_op(x: Array, gamma: Array, beta: Array, *,
                    params: Optional[PTFQuantParams] = None,
-                   interpret: bool = True) -> Array:
+                   interpret: Optional[bool] = None) -> Array:
     """AILayerNorm on real inputs: PTF-quantize then integer kernel."""
-    if params is None:
-        params = calibrate_ptf(x, unsigned=True)
-    xq = params.quantize(x)
-    xi = xq - params.zero_point
-    return ailayernorm_pallas(xi, params.alpha, gamma, beta,
+    return ailayernorm_pallas(x, gamma, beta, params=params,
                               interpret=interpret)
+
+
+def fused_add_norm_op(x: Array, r: Array, gamma: Array, beta=None, *,
+                      params: Optional[PTFQuantParams] = None,
+                      rms: bool = False,
+                      interpret: Optional[bool] = None):
+    """Fused ``h = x + r; AILayerNorm(h)`` -> (h, norm_out)."""
+    return fused_add_norm_pallas(x, r, gamma, beta, params=params, rms=rms,
+                                 interpret=interpret)
 
 
 def flash_attention_op(q: Array, k: Array, v: Array, *, causal: bool = True,
                        sole: bool = True, exp_bits: int = 4,
                        int8_scale: Optional[float] = None,
-                       block: int = 128, interpret: bool = True,
+                       block: int = 128,
+                       interpret: Optional[bool] = None,
                        exact_corr: bool = False) -> Array:
     """Fused attention. q (B,S,H,hd), k/v (B,T,KV,hd) -> (B,S,H,hd)."""
     b, s, h, hd = q.shape

@@ -1,13 +1,24 @@
 """Serving launcher: batched generation with SOLE active.
 
+The execution backend for every softmax/norm/attention op resolves
+through the ``repro.ops`` registry: ``--ops-backend auto`` compiles the
+Pallas kernels on TPU and falls back to the pure-jnp reference
+elsewhere; ``reference`` / ``pallas`` force one engine (``pallas``
+interprets the kernel bodies off-TPU).
+
 Example (CPU smoke):
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
     PYTHONPATH=src python -m repro.launch.serve --arch mixtral_8x7b --smoke \
     --requests 8 --prompt-len 16 --new-tokens 8
+
+Paged continuous batching (dense LMs):
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2_0_5b --smoke \
+    --engine paged --ops-backend pallas
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -16,7 +27,7 @@ import numpy as np
 from repro.configs.base import get_config
 from repro.launch.mesh import make_mesh, make_rules
 from repro.models import api
-from repro.serve.engine import Engine, Request
+from repro.serve.engine import Engine, PagedEngine, Request
 
 
 def main() -> None:
@@ -27,6 +38,13 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=8)
     ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--engine", choices=("dense", "paged"), default="dense",
+                    help="dense-slot baseline or paged continuous batching")
+    ap.add_argument("--ops-backend",
+                    choices=("auto", "reference", "pallas"), default="auto",
+                    help="repro.ops execution backend for softmax/norm/"
+                         "attention (auto = pallas on TPU, reference "
+                         "elsewhere)")
     ap.add_argument("--mesh", default="")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -34,6 +52,7 @@ def main() -> None:
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = cfg.smoke()
+    cfg = dataclasses.replace(cfg, ops_backend=args.ops_backend)
     if args.mesh:
         dims = tuple(int(x) for x in args.mesh.split(","))
         mesh = make_mesh(dims, ("data", "model")[:len(dims)])
@@ -47,15 +66,23 @@ def main() -> None:
                                         size=args.prompt_len).astype(np.int32),
                     max_new_tokens=args.new_tokens)
             for _ in range(args.requests)]
-    eng = Engine(cfg, params, batch_size=args.batch,
-                 max_len=args.prompt_len + args.new_tokens, rules=rules)
+    max_len = args.prompt_len + args.new_tokens
+    if args.engine == "paged":
+        blocks = max(args.requests * ((max_len + 15) // 16 + 1), 16)
+        eng = PagedEngine(cfg, params, num_blocks=blocks, block_size=16,
+                          max_seq_len=max_len, max_running=args.batch,
+                          decode_batch=args.batch, rules=rules)
+    else:
+        eng = Engine(cfg, params, batch_size=args.batch, max_len=max_len,
+                     rules=rules)
     t0 = time.perf_counter()
     outs = eng.generate(reqs)
     dt = time.perf_counter() - t0
     total = sum(len(o) for o in outs)
-    print(f"arch={cfg.name} requests={len(reqs)} generated={total} tokens "
+    print(f"arch={cfg.name} engine={args.engine} requests={len(reqs)} "
+          f"generated={total} tokens "
           f"in {dt:.2f}s ({total/dt:.1f} tok/s, softmax={cfg.softmax_mode}, "
-          f"norm={cfg.norm_mode})")
+          f"norm={cfg.norm_mode}, ops_backend={cfg.ops_backend})")
     for o in outs[:2]:
         print("sample:", o)
 

@@ -14,8 +14,8 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import ops
 from repro.configs.base import ArchConfig
-from repro.core.nonlin import layernorm_fn, rmsnorm_fn, softmax_fn
 from repro.core.sole.e2softmax import aldivision, log2exp
 from repro.sharding.rules import constrain
 
@@ -90,13 +90,36 @@ def init_norm(cfg: ArchConfig) -> Dict[str, Param]:
     return {"g": ones_param((d,), ("embed",))}
 
 
+def _norm_mode(cfg: ArchConfig, phase: str) -> str:
+    return cfg.train_norm_mode if phase == "train" else cfg.norm_mode
+
+
 def apply_norm(x: Array, p, cfg: ArchConfig, phase: str) -> Array:
-    mode = cfg.train_norm_mode if phase == "train" else cfg.norm_mode
+    mode = _norm_mode(cfg, phase)
     if cfg.norm_kind == "layernorm":
-        out = layernorm_fn(mode)(x, p["g"], p["b"])
+        out = ops.layernorm_fn(mode, cfg)(x, p["g"], p["b"])
     else:
-        out = rmsnorm_fn(mode)(x, p["g"])
+        out = ops.rmsnorm_fn(mode, cfg)(x, p["g"])
     return cast(out, cfg)
+
+
+def apply_residual_norm(x: Array, r: Array, p, cfg: ArchConfig,
+                        phase: str) -> Tuple[Array, Array]:
+    """Fused ``x + r`` followed by norm: returns (new residual stream,
+    normalized output), both cast to the model dtype.
+
+    In SOLE mode with the pallas backend this is one VMEM-resident
+    kernel (residual add + PTF quantize + AILayerNorm statistics +
+    affine); otherwise it falls back to the unfused reference
+    composition, bit-identical to writing ``x = x + r; apply_norm(x)``.
+    """
+    mode = _norm_mode(cfg, phase)
+    fn = ops.residual_norm_fn(cfg.norm_kind, mode, cfg)
+    if cfg.norm_kind == "layernorm":
+        s, out = fn(x, r, p["g"], p["b"])
+    else:
+        s, out = fn(x, r, p["g"])
+    return cast(s, cfg), cast(out, cfg)
 
 
 # -- embeddings / head -------------------------------------------------------
@@ -233,10 +256,7 @@ def _softmax_mode(cfg: ArchConfig, phase: str) -> str:
 
 def _snap_logits(d: Array, cfg: ArchConfig) -> Array:
     """int8-grid snap of post-max logits (paper: 8-bit softmax inputs)."""
-    if not cfg.logit_int8:
-        return d
-    q = jnp.clip(jnp.round(d / LOGIT_INT8_SCALE), -127, 0)
-    return q * LOGIT_INT8_SCALE
+    return ops.snap_logits(d, LOGIT_INT8_SCALE if cfg.logit_int8 else None)
 
 
 def _mask(q_pos: Array, k_pos: Array, cfg: ArchConfig, causal: bool) -> Array:
@@ -278,9 +298,9 @@ def attend_dense(q, k, v, q_pos, k_pos, cfg: ArchConfig, phase: str,
         m = jnp.max(jnp.where(mask, logits, -jnp.inf), -1, keepdims=True)
         m = jnp.maximum(m, -1e30)
         logits = _snap_logits(logits - m, cfg)
-        probs = softmax_fn("sole")(logits, mask=mask, exp_bits=cfg.exp_bits)
+        probs = ops.softmax_fn("sole", cfg)(logits, mask=mask, exp_bits=cfg.exp_bits)
     else:
-        probs = softmax_fn(mode)(logits, mask=mask)
+        probs = ops.softmax_fn(mode, cfg)(logits, mask=mask)
     probs = probs.astype(q.dtype)
     return jnp.einsum("bhst,bthd->bshd", probs, v)
 
@@ -536,10 +556,10 @@ def decode_attend_stacked(p, x1: Array, ck: Array, cv: Array, cpos: Array,
     if mode == "sole":
         m = jnp.max(jnp.where(mask, logits, -jnp.inf), -1, keepdims=True)
         m = jnp.maximum(m, -1e30)
-        probs = softmax_fn("sole")(_snap_logits(logits - m, cfg), mask=mask,
+        probs = ops.softmax_fn("sole", cfg)(_snap_logits(logits - m, cfg), mask=mask,
                                    exp_bits=cfg.exp_bits)
     else:
-        probs = softmax_fn(mode)(logits, mask=mask)
+        probs = ops.softmax_fn(mode, cfg)(logits, mask=mask)
     probs = probs.astype(q.dtype)
     ctx = jnp.einsum("bkgt,bktd->bkgd", probs[..., :t], vl)
     ctx = ctx + probs[..., t:] * vc
@@ -617,10 +637,10 @@ def decode_attend(p, x1: Array, cache: Dict[str, Array], pos: Array,
     if mode == "sole":
         m = jnp.max(jnp.where(mask, logits, -jnp.inf), -1, keepdims=True)
         m = jnp.maximum(m, -1e30)
-        probs = softmax_fn("sole")(_snap_logits(logits - m, cfg), mask=mask,
+        probs = ops.softmax_fn("sole", cfg)(_snap_logits(logits - m, cfg), mask=mask,
                                    exp_bits=cfg.exp_bits)
     else:
-        probs = softmax_fn(mode)(logits, mask=mask)
+        probs = ops.softmax_fn(mode, cfg)(logits, mask=mask)
     ctx = jnp.einsum("bhst,bthd->bshd", probs.astype(q.dtype), vf)
     out = jnp.einsum("bshk,hkd->bsd", ctx, cast(p["wo"], cfg))
     return out, {"k": ck, "v": cv, "pos": cpos}
@@ -674,57 +694,26 @@ def _paged_kv_scale(cfg: ArchConfig):
 
 def paged_attend(q: Array, pool_k: Array, pool_v: Array, tables: Array,
                  q_start: Array, kv_len: Array, cfg: ArchConfig, *,
-                 causal: bool, backend: str = "pallas") -> Array:
+                 causal: bool, backend: Optional[str] = None) -> Array:
     """Attention for C chunk queries per sequence against paged KV.
 
     q: (B, C, H, hd); pool_k/pool_v: (N, bs, KV, hd) one layer's pool
     (the chunk's own K/V already written); tables: (B, NB) page tables;
     q_start/kv_len: (B,) absolute position of q row 0 / valid key count.
 
-    backend "pallas" streams pages through flash_e2softmax_paged (SOLE's
-    online-softmax in the serving hot loop); "reference" gathers pages to
-    a contiguous cache and reuses the two-pass softmax_fn path — the
-    oracle for paged-vs-dense equivalence tests and non-SOLE modes.
+    The implementation resolves through the ``repro.ops`` registry:
+    ``pallas`` streams pages through the scalar-prefetch flash kernel
+    (SOLE's online-softmax in the serving hot loop); ``reference``
+    gathers pages to a contiguous cache and reuses the two-pass softmax
+    path — the oracle for paged-vs-dense equivalence tests and the
+    fallback for softmax modes the kernel does not implement.
+    ``backend=None`` resolves from ``cfg.ops_backend``.
     """
-    b, c, h, hd = q.shape
     mode = _softmax_mode(cfg, phase="serve")
-    if backend == "pallas":
-        if mode not in ("sole", "exact"):
-            raise ValueError(
-                f"pallas paged backend supports sole/exact, got {mode}")
-        from repro.kernels.flash_e2softmax import flash_e2softmax_paged
-        sole = mode == "sole"
-        meta = jnp.stack([q_start.astype(jnp.int32),
-                          kv_len.astype(jnp.int32)], 1)
-        ctx = flash_e2softmax_paged(
-            jnp.moveaxis(q, 1, 2), pool_k, pool_v, tables, meta,
-            causal=causal, sole=sole, exp_bits=cfg.exp_bits,
-            int8_scale=(LOGIT_INT8_SCALE if sole and cfg.logit_int8
-                        else None),
-            kv_scale=_paged_kv_scale(cfg))
-        return jnp.moveaxis(ctx, 1, 2).astype(q.dtype)
-    if backend != "reference":
-        raise ValueError(f"unknown paged backend {backend!r}")
-    from repro.serve.kv_cache import gather_kv
-    k = kv_dequant(gather_kv(pool_k, tables), cfg)      # (B, T, KV, hd)
-    v = kv_dequant(gather_kv(pool_v, tables), cfg)
-    t = k.shape[1]
-    kf = _repeat_kv(cast(k, cfg), h)
-    vf = _repeat_kv(cast(v, cfg), h)
-    qs = q * (hd ** -0.5)
-    logits = jnp.einsum("bchd,bthd->bhct", qs, kf).astype(jnp.float32)
-    cols = jnp.arange(t)[None, None, None, :]
-    mask = cols < kv_len[:, None, None, None]
-    if causal:
-        rows = q_start[:, None] + jnp.arange(c)[None]   # (B, C)
-        mask = mask & (rows[:, None, :, None] >= cols)
-    mask = jnp.broadcast_to(mask, logits.shape)
-    if mode == "sole":
-        m = jnp.max(jnp.where(mask, logits, -jnp.inf), -1, keepdims=True)
-        m = jnp.maximum(m, -1e30)
-        probs = softmax_fn("sole")(_snap_logits(logits - m, cfg), mask=mask,
-                                   exp_bits=cfg.exp_bits)
-    else:
-        probs = softmax_fn(mode)(logits, mask=mask)
-    ctx = jnp.einsum("bhct,bthd->bchd", probs.astype(q.dtype), vf)
-    return ctx
+    sole = mode == "sole"
+    fn = ops.paged_attention_fn(mode, cfg, backend)
+    return fn(q, pool_k, pool_v, tables, q_start, kv_len, causal=causal,
+              exp_bits=cfg.exp_bits,
+              int8_scale=(LOGIT_INT8_SCALE if sole and cfg.logit_int8
+                          else None),
+              kv_scale=_paged_kv_scale(cfg))

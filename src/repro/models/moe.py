@@ -203,8 +203,8 @@ def forward(params, tokens: Array, cfg: ArchConfig, phase: str):
     def layer(carry, lp):
         x, aux = carry
         h = L.apply_norm(x, lp["ln1"], cfg, phase)
-        x = x + L.apply_attention(lp["attn"], h, positions, cfg, phase)
-        h = L.apply_norm(x, lp["ln2"], cfg, phase)
+        attn_out = L.apply_attention(lp["attn"], h, positions, cfg, phase)
+        x, h = L.apply_residual_norm(x, attn_out, lp["ln2"], cfg, phase)
         out, aux_l = apply_moe_ffn(lp["mlp"], h, cfg, phase)
         x = constrain(x + out, "batch", "seq", "embed")
         return (x, aux + aux_l), None

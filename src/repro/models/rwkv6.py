@@ -87,8 +87,8 @@ def _group_norm(o: Array, g: Array, b: Array, cfg: ArchConfig,
                 phase: str) -> Array:
     """Per-head LayerNorm over head_dim; SOLE AIGroupNorm when serving."""
     mode = cfg.train_norm_mode if phase == "train" else cfg.norm_mode
-    from repro.core.nonlin import layernorm_fn
-    return layernorm_fn(mode)(o, g, b)
+    from repro import ops
+    return ops.layernorm_fn(mode, cfg)(o, g, b)
 
 
 def _shift(x: Array, last: Array) -> Array:

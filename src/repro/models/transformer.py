@@ -3,7 +3,7 @@ backbone). MoE archs reuse this module with the FFN swapped (models/moe.py).
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, Tuple
+from typing import Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -52,8 +52,8 @@ def _layer_fn(cfg: ArchConfig, phase: str, ffn_apply=None):
 
     def layer(x, lp, positions):
         h = L.apply_norm(x, lp["ln1"], cfg, phase)
-        x = x + L.apply_attention(lp["attn"], h, positions, cfg, phase)
-        h = L.apply_norm(x, lp["ln2"], cfg, phase)
+        attn_out = L.apply_attention(lp["attn"], h, positions, cfg, phase)
+        x, h = L.apply_residual_norm(x, attn_out, lp["ln2"], cfg, phase)
         x = x + ffn_apply(lp["mlp"], h, cfg, phase)
         return constrain(x, "batch", "seq", "embed")
 
@@ -119,8 +119,7 @@ def prefill(params, tokens: Array, cfg: ArchConfig, cache_len: int,
         fn = L.attend_blocked if impl == "blocked" else L.attend_dense
         ctx = fn(q, k, v, positions, positions, cfg, "serve", causal=cfg.causal)
         attn_out = jnp.einsum("bshk,hkd->bsd", ctx, L.cast(lp["attn"]["wo"], cfg))
-        x = x + attn_out
-        h = L.apply_norm(x, lp["ln2"], cfg, "serve")
+        x, h = L.apply_residual_norm(x, attn_out, lp["ln2"], cfg, "serve")
         x = x + ffn_apply(lp["mlp"], h, cfg, "serve")
         kq, vq, pp = L.pack_prefill_cache(k, v, positions, t, cfg)
         cache_l = {"k": kq, "v": vq, "pos": pp}
@@ -156,8 +155,7 @@ def decode_step(params, cache, token: Array, pos: Array, cfg: ArchConfig,
         h = L.apply_norm(x, lp["ln1"], cfg, "serve")
         attn_out, k_col, v_row = L.decode_attend_stacked(
             lp["attn"], h, ck, cv, cpos, idx, pos, cfg)
-        x = x + attn_out
-        h = L.apply_norm(x, lp["ln2"], cfg, "serve")
+        x, h = L.apply_residual_norm(x, attn_out, lp["ln2"], cfg, "serve")
         x = x + ffn_apply(lp["mlp"], h, cfg, "serve")
         return x, (k_col, v_row)
 
@@ -173,7 +171,7 @@ def decode_step(params, cache, token: Array, pos: Array, cfg: ArchConfig,
 
 
 def _paged_forward(params, tokens, positions, kv_len, tables, pools,
-                   cfg: ArchConfig, *, causal: bool, backend: str,
+                   cfg: ArchConfig, *, causal: bool, backend: Optional[str],
                    ffn_apply=None):
     """Run C tokens per sequence against the paged pools.
 
@@ -186,6 +184,13 @@ def _paged_forward(params, tokens, positions, kv_len, tables, pools,
     rest of the context. Layers run as a Python loop (pools carry a
     per-layer scatter that scan cannot batch); returns (logits (B,C,V),
     updated pools).
+
+    The serve hot path defers each residual add into the *consumer*
+    norm: the MLP output of layer i merges with layer i+1's ln1 (and
+    the last one with the final norm) through
+    :func:`L.apply_residual_norm`, so in SOLE/pallas mode every
+    residual-add + PTF quantize + AILayerNorm runs as one fused
+    VMEM-resident kernel instead of three HBM round trips.
     """
     from repro.serve.kv_cache import slots_for_positions, write_tokens
     ffn_apply = ffn_apply or (lambda p, x, c, ph: L.apply_mlp(x, p, c))
@@ -196,8 +201,12 @@ def _paged_forward(params, tokens, positions, kv_len, tables, pools,
     block_ids, offsets = slots_for_positions(positions, block_size, tables)
     leaves = [jax.tree.map(lambda a: a[i], params["layers"])
               for i in range(cfg.n_layers)]
+    pending = None                      # deferred MLP residual
     for i, lp in enumerate(leaves):
-        h = L.apply_norm(x, lp["ln1"], cfg, "serve")
+        if pending is None:
+            h = L.apply_norm(x, lp["ln1"], cfg, "serve")
+        else:
+            x, h = L.apply_residual_norm(x, pending, lp["ln1"], cfg, "serve")
         q, k, v = L._project_qkv(lp["attn"], h, cfg)
         if cfg.pos_kind == "rope":
             q = L.apply_rope(q, positions, cfg)
@@ -208,17 +217,22 @@ def _paged_forward(params, tokens, positions, kv_len, tables, pools,
                                        block_ids, offsets))
         ctx = L.paged_attend(q, pk[i], pv[i], tables, q_start, kv_len,
                              cfg, causal=causal, backend=backend)
-        x = x + jnp.einsum("bshk,hkd->bsd", ctx, L.cast(lp["attn"]["wo"], cfg))
-        h = L.apply_norm(x, lp["ln2"], cfg, "serve")
-        x = x + ffn_apply(lp["mlp"], h, cfg, "serve")
+        attn_out = jnp.einsum("bshk,hkd->bsd", ctx,
+                              L.cast(lp["attn"]["wo"], cfg))
+        x, h = L.apply_residual_norm(x, attn_out, lp["ln2"], cfg, "serve")
         x = constrain(x, "batch", "seq", "embed")
-    x = L.apply_norm(x, params["final_norm"], cfg, "serve")
+        pending = ffn_apply(lp["mlp"], h, cfg, "serve")
+    if pending is None:
+        x = L.apply_norm(x, params["final_norm"], cfg, "serve")
+    else:
+        _, x = L.apply_residual_norm(x, pending, params["final_norm"],
+                                     cfg, "serve")
     logits = L.lm_logits(params["embed"], x, cfg)
     return logits, {"k": pk, "v": pv}
 
 
 def prefill_paged(params, tokens: Array, q_start: Array, tables: Array,
-                  pools, cfg: ArchConfig, *, backend: str = "pallas",
+                  pools, cfg: ArchConfig, *, backend: Optional[str] = None,
                   ffn_apply=None):
     """One chunked-prefill step: write + attend C prompt tokens.
 
@@ -237,7 +251,7 @@ def prefill_paged(params, tokens: Array, q_start: Array, tables: Array,
 
 def decode_step_paged(params, pools, token: Array, pos: Array,
                       tables: Array, cfg: ArchConfig, *,
-                      backend: str = "pallas", ffn_apply=None):
+                      backend: Optional[str] = None, ffn_apply=None):
     """One continuous-batching decode step: token (B,) at positions (B,).
 
     The live token is written to its page first, then attended through

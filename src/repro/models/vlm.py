@@ -33,8 +33,9 @@ def forward(params, batch: Dict[str, Array], cfg: ArchConfig,
 
     def layer(x, lp):
         h = L.apply_norm(x, lp["ln1"], cfg, phase)
-        x = x + L.apply_attention_mrope(lp["attn"], h, positions3, cfg, phase)
-        h = L.apply_norm(x, lp["ln2"], cfg, phase)
+        attn_out = L.apply_attention_mrope(lp["attn"], h, positions3, cfg,
+                                           phase)
+        x, h = L.apply_residual_norm(x, attn_out, lp["ln2"], cfg, phase)
         x = x + L.apply_mlp(h, lp["mlp"], cfg)
         return constrain(x, "batch", "seq", "embed"), None
 
@@ -70,8 +71,9 @@ def prefill(params, batch: Dict[str, Array], cfg: ArchConfig,
         q = L.apply_mrope(q, positions3, cfg)
         k = L.apply_mrope(k, positions3, cfg)
         ctx = L.attend_dense(q, k, v, flat_pos, flat_pos, cfg, "serve")
-        x = x + jnp.einsum("bshk,hkd->bsd", ctx, L.cast(lp["attn"]["wo"], cfg))
-        h = L.apply_norm(x, lp["ln2"], cfg, "serve")
+        attn_out = jnp.einsum("bshk,hkd->bsd", ctx,
+                              L.cast(lp["attn"]["wo"], cfg))
+        x, h = L.apply_residual_norm(x, attn_out, lp["ln2"], cfg, "serve")
         x = x + L.apply_mlp(h, lp["mlp"], cfg)
         kq, vq, pp = L.pack_prefill_cache(k, v, flat_pos, t, cfg)
         cache_l = {"k": kq, "v": vq, "pos": pp}
@@ -97,8 +99,7 @@ def decode_step(params, cache, token: Array, pos: Array, cfg: ArchConfig):
         h = L.apply_norm(x, lp["ln1"], cfg, "serve")
         attn_out, k_col, v_row = L.decode_attend_stacked(
             lp["attn"], h, ck, cv, cpos, idx, pos, cfg, positions3=pos3)
-        x = x + attn_out
-        h = L.apply_norm(x, lp["ln2"], cfg, "serve")
+        x, h = L.apply_residual_norm(x, attn_out, lp["ln2"], cfg, "serve")
         x = x + L.apply_mlp(h, lp["mlp"], cfg)
         return x, (k_col, v_row)
 

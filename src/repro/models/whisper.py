@@ -68,9 +68,9 @@ def encode(params, frames: Array, cfg: ArchConfig, phase: str) -> Array:
 
     def layer(x, lp):
         h = L.apply_norm(x, lp["ln1"], cfg, phase)
-        x = x + L.apply_attention(lp["attn"], h, positions, cfg, phase,
-                                  causal=False)
-        h = L.apply_norm(x, lp["ln2"], cfg, phase)
+        attn_out = L.apply_attention(lp["attn"], h, positions, cfg, phase,
+                                     causal=False)
+        x, h = L.apply_residual_norm(x, attn_out, lp["ln2"], cfg, phase)
         x = x + L.apply_mlp(h, lp["mlp"], cfg)
         return constrain(x, "batch", "seq", "embed"), None
 
@@ -87,12 +87,12 @@ def decode(params, tokens: Array, enc_out: Array, cfg: ArchConfig,
 
     def layer(x, lp):
         h = L.apply_norm(x, lp["ln1"], cfg, phase)
-        x = x + L.apply_attention(lp["attn"], h, positions, cfg, phase,
-                                  causal=True)
-        h = L.apply_norm(x, lp["ln_x"], cfg, phase)
+        attn_out = L.apply_attention(lp["attn"], h, positions, cfg, phase,
+                                     causal=True)
+        x, h = L.apply_residual_norm(x, attn_out, lp["ln_x"], cfg, phase)
         kv = L.cross_kv(lp["xattn"], enc_out, cfg)
-        x = x + L.apply_cross_attention(lp["xattn"], h, kv, cfg, phase)
-        h = L.apply_norm(x, lp["ln2"], cfg, phase)
+        xattn_out = L.apply_cross_attention(lp["xattn"], h, kv, cfg, phase)
+        x, h = L.apply_residual_norm(x, xattn_out, lp["ln2"], cfg, phase)
         x = x + L.apply_mlp(h, lp["mlp"], cfg)
         return constrain(x, "batch", "seq", "embed"), None
 
@@ -148,12 +148,13 @@ def prefill(params, batch: Dict[str, Array], cfg: ArchConfig,
         h = L.apply_norm(x, lp["ln1"], cfg, "serve")
         q, k, v = L._project_qkv(lp["attn"], h, cfg)
         ctx = L.attend_dense(q, k, v, positions, positions, cfg, "serve")
-        x = x + jnp.einsum("bshk,hkd->bsd", ctx, L.cast(lp["attn"]["wo"], cfg))
-        h = L.apply_norm(x, lp["ln_x"], cfg, "serve")
+        attn_out = jnp.einsum("bshk,hkd->bsd", ctx,
+                              L.cast(lp["attn"]["wo"], cfg))
+        x, h = L.apply_residual_norm(x, attn_out, lp["ln_x"], cfg, "serve")
         ckv = L.cross_kv(lp["xattn"], enc_ctx, cfg)
-        x = x + L.apply_cross_attention(lp["xattn"], h, ckv, cfg, "serve",
-                                        k_pos=cross_pos)
-        h = L.apply_norm(x, lp["ln2"], cfg, "serve")
+        xattn_out = L.apply_cross_attention(lp["xattn"], h, ckv, cfg, "serve",
+                                            k_pos=cross_pos)
+        x, h = L.apply_residual_norm(x, xattn_out, lp["ln2"], cfg, "serve")
         x = x + L.apply_mlp(h, lp["mlp"], cfg)
         kq, vq, pp = L.pack_prefill_cache(k, v, positions, t, cfg)
         cache_l = {"k": kq, "v": vq, "pos": pp}
@@ -187,13 +188,13 @@ def decode_step(params, cache, token: Array, pos: Array, cfg: ArchConfig):
         h = L.apply_norm(x, lp["ln1"], cfg, "serve")
         attn_out, k_col, v_row = L.decode_attend_stacked(
             lp["attn"], h, sk, sv, cpos, idx, pos, cfg, rope=False)
-        x = x + attn_out
-        h = L.apply_norm(x, lp["ln_x"], cfg, "serve")
-        x = x + L.apply_cross_attention(lp["xattn"], h,
-                                        (L.cast(ck, cfg), L.cast(cv, cfg)),
-                                        cfg, "serve",
-                                        k_pos=cache["cross_pos"])
-        h = L.apply_norm(x, lp["ln2"], cfg, "serve")
+        x, h = L.apply_residual_norm(x, attn_out, lp["ln_x"], cfg, "serve")
+        xattn_out = L.apply_cross_attention(lp["xattn"], h,
+                                            (L.cast(ck, cfg),
+                                             L.cast(cv, cfg)),
+                                            cfg, "serve",
+                                            k_pos=cache["cross_pos"])
+        x, h = L.apply_residual_norm(x, xattn_out, lp["ln2"], cfg, "serve")
         x = x + L.apply_mlp(h, lp["mlp"], cfg)
         return x, (k_col, v_row)
 

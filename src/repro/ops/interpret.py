@@ -1,0 +1,26 @@
+"""Pallas ``interpret`` autodetection.
+
+Kernels take ``interpret=None`` by default and resolve it here: compiled
+Pallas lowering is only exercised on TPU (the kernels use ``pltpu``
+scratch shapes and TPU BlockSpecs); every other platform — CPU tests,
+GPU dev boxes — runs the kernel bodies in interpret mode so the same
+call sites work everywhere. This module must stay dependency-light: the
+kernel modules import it, and it must never import them back.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+
+def pallas_compiles() -> bool:
+    """True when Pallas kernels can run compiled on the default backend."""
+    return jax.default_backend() == "tpu"
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """``None`` -> autodetect (compile on TPU, interpret elsewhere)."""
+    if interpret is None:
+        return not pallas_compiles()
+    return bool(interpret)

@@ -1,0 +1,108 @@
+"""Pallas backend: fused TPU kernels behind the registry signatures.
+
+Kernel modules are imported lazily inside each adapter — they import
+``repro.ops.interpret`` for the autodetect flag, so a top-level import
+here would be circular. Each adapter matches its reference twin's
+signature exactly; ``interpret=None`` flows down to the kernels and
+resolves per platform (compiled on TPU, interpret elsewhere).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.ops import registry
+
+Array = jax.Array
+
+
+@registry.register("softmax", "sole", "pallas")
+def sole_softmax_pallas(x, *, axis: int = -1, mask=None, exp_bits: int = 4,
+                        input_scale=None, interpret: Optional[bool] = None,
+                        block_rows: int = 256):
+    """E2Softmax kernel; masked entries produce exact 0 (reference
+    semantics). ``input_scale`` snaps logits to an int8 grid pre-kernel,
+    mirroring the reference ``e2softmax``."""
+    if axis not in (-1, x.ndim - 1):
+        raise ValueError("pallas e2softmax normalizes the last axis only")
+    from repro.kernels.e2softmax import e2softmax_pallas
+    if input_scale is not None:
+        x = jnp.clip(jnp.round(x / input_scale), -128, 127) * input_scale
+    return e2softmax_pallas(x, exp_bits=exp_bits, mask=mask,
+                            block_rows=block_rows, interpret=interpret)
+
+
+@registry.register("layernorm", "sole", "pallas")
+def sole_layernorm_pallas(x, gamma, beta, *, params=None,
+                          interpret: Optional[bool] = None, **kw):
+    from repro.kernels.ailayernorm import ailayernorm_pallas
+    return ailayernorm_pallas(x, gamma, beta, params=params,
+                              interpret=interpret)
+
+
+@registry.register("rmsnorm", "sole", "pallas")
+def sole_rmsnorm_pallas(x, gamma, *, params=None,
+                        interpret: Optional[bool] = None, **kw):
+    from repro.kernels.ailayernorm import airmsnorm_pallas
+    return airmsnorm_pallas(x, gamma, params=params, interpret=interpret)
+
+
+@registry.register("residual_layernorm", "sole", "pallas")
+def sole_residual_layernorm_pallas(x, r, gamma, beta=None, *, params=None,
+                                   interpret: Optional[bool] = None, **kw):
+    from repro.kernels.ailayernorm import fused_add_norm_pallas
+    return fused_add_norm_pallas(x, r, gamma, beta, params=params,
+                                 rms=False, interpret=interpret)
+
+
+@registry.register("residual_rmsnorm", "sole", "pallas")
+def sole_residual_rmsnorm_pallas(x, r, gamma, beta=None, *, params=None,
+                                 interpret: Optional[bool] = None, **kw):
+    from repro.kernels.ailayernorm import fused_add_norm_pallas
+    return fused_add_norm_pallas(x, r, gamma, None, params=params,
+                                 rms=True, interpret=interpret)
+
+
+def _flash_attention(sole: bool):
+    def fn(q, k, v, *, causal: bool = True, exp_bits: int = 4,
+           int8_scale: Optional[float] = None, block: int = 128,
+           interpret: Optional[bool] = None, exact_corr: bool = False):
+        from repro.kernels.ops import flash_attention_op
+        return flash_attention_op(q, k, v, causal=causal, sole=sole,
+                                  exp_bits=exp_bits, int8_scale=int8_scale,
+                                  block=block, interpret=interpret,
+                                  exact_corr=exact_corr)
+    return fn
+
+
+registry.register("flash_attention", "exact", "pallas")(
+    _flash_attention(sole=False))
+registry.register("flash_attention", "sole", "pallas")(
+    _flash_attention(sole=True))
+
+
+def _paged_attention(sole: bool):
+    def fn(q, pool_k, pool_v, tables, q_start, kv_len, *, causal: bool,
+           exp_bits: int = 4, int8_scale: Optional[float] = None,
+           kv_scale: Optional[float] = None,
+           interpret: Optional[bool] = None, **kw):
+        """Streams pages through the scalar-prefetch paged flash kernel —
+        SOLE's online softmax in the serving hot loop. Layouts match the
+        reference twin: q (B, C, H, hd) -> (B, C, H, hd)."""
+        from repro.kernels.flash_e2softmax import flash_e2softmax_paged
+        meta = jnp.stack([q_start.astype(jnp.int32),
+                          kv_len.astype(jnp.int32)], 1)
+        ctx = flash_e2softmax_paged(
+            jnp.moveaxis(q, 1, 2), pool_k, pool_v, tables, meta,
+            causal=causal, sole=sole, exp_bits=exp_bits,
+            int8_scale=int8_scale, kv_scale=kv_scale, interpret=interpret)
+        return jnp.moveaxis(ctx, 1, 2).astype(q.dtype)
+    return fn
+
+
+registry.register("paged_attention", "exact", "pallas")(
+    _paged_attention(sole=False))
+registry.register("paged_attention", "sole", "pallas")(
+    _paged_attention(sole=True))

@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import ops
 from repro.configs.base import ArchConfig
 from repro.models import api
 from repro.serve.kv_cache import PagedKVCache
@@ -57,16 +58,19 @@ class PagedEngine:
       * ``_decode``: one token for up to ``decode_batch`` sequences (lane
         count static; short batches are padded with null-page lanes).
 
-    ``backend="pallas"`` routes attention through the paged flash
+    Attention implementations resolve through the ``repro.ops``
+    registry: ``backend="pallas"`` streams pages through the paged flash
     kernels; ``backend="reference"`` gathers pages and reuses the XLA
     softmax path (oracle for equivalence tests, and the fallback for
-    softmax modes the kernel does not implement).
+    softmax modes the kernel does not implement). ``backend=None``
+    resolves from ``cfg.ops_backend`` with the standard autodetect
+    (``auto`` = compiled kernels on TPU, XLA reference elsewhere).
     """
 
     def __init__(self, cfg: ArchConfig, params, *, num_blocks: int = 64,
                  block_size: int = 16, max_seq_len: int = 256,
                  max_running: int = 8, decode_batch: int = 4,
-                 prefill_chunk: int = 16, backend: str = "pallas",
+                 prefill_chunk: int = 16, backend: Optional[str] = None,
                  rules: Optional[R.Rules] = None):
         if cfg.family != "dense":
             raise ValueError(
@@ -74,6 +78,9 @@ class PagedEngine:
         if cfg.window:
             raise ValueError("PagedEngine does not support sliding-window "
                              "caches (pages are append-only)")
+        if backend is None:
+            backend = ops.backend_for(cfg, "paged_attention",
+                                      cfg.softmax_mode)
         self.cfg = cfg
         self.params = params
         self.decode_batch = decode_batch
