@@ -40,6 +40,22 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--engine", choices=("dense", "paged"), default="dense",
                     help="dense-slot baseline or paged continuous batching")
+    ap.add_argument("--prefix-cache", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="share identical block-aligned prompt prefixes "
+                         "between sequences (paged engine only)")
+    ap.add_argument("--watermark", type=int, default=1,
+                    help="free pages held back at admission; higher = "
+                         "fewer preemptions, lower = denser packing")
+    ap.add_argument("--num-blocks", type=int, default=0,
+                    help="KV pool pages (0 = sized from the request set)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy argmax)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="restrict sampling to the k highest logits "
+                         "(0 = full vocab)")
+    ap.add_argument("--sample-seed", type=int, default=0,
+                    help="base seed for per-request sampling streams")
     ap.add_argument("--ops-backend",
                     choices=("auto", "reference", "pallas"), default="auto",
                     help="repro.ops execution backend for softmax/norm/"
@@ -64,14 +80,19 @@ def main() -> None:
     rng = np.random.default_rng(args.seed)
     reqs = [Request(prompt=rng.integers(0, cfg.vocab_size,
                                         size=args.prompt_len).astype(np.int32),
-                    max_new_tokens=args.new_tokens)
-            for _ in range(args.requests)]
+                    max_new_tokens=args.new_tokens,
+                    temperature=args.temperature, top_k=args.top_k,
+                    seed=args.sample_seed + i)
+            for i in range(args.requests)]
     max_len = args.prompt_len + args.new_tokens
     if args.engine == "paged":
-        blocks = max(args.requests * ((max_len + 15) // 16 + 1), 16)
+        blocks = args.num_blocks or max(
+            args.requests * ((max_len + 15) // 16 + 1), 16)
         eng = PagedEngine(cfg, params, num_blocks=blocks, block_size=16,
                           max_seq_len=max_len, max_running=args.batch,
-                          decode_batch=args.batch, rules=rules)
+                          decode_batch=args.batch, rules=rules,
+                          prefix_cache=args.prefix_cache,
+                          watermark=args.watermark)
     else:
         eng = Engine(cfg, params, batch_size=args.batch, max_len=max_len,
                      rules=rules)
@@ -83,6 +104,8 @@ def main() -> None:
           f"generated={total} tokens "
           f"in {dt:.2f}s ({total/dt:.1f} tok/s, softmax={cfg.softmax_mode}, "
           f"norm={cfg.norm_mode}, ops_backend={cfg.ops_backend})")
+    if args.engine == "paged":
+        print("stats:", eng.stats())
     for o in outs[:2]:
         print("sample:", o)
 

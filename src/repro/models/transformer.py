@@ -170,20 +170,24 @@ def decode_step(params, cache, token: Array, pos: Array, cfg: ArchConfig,
 # -- paged serving (block-paged KV pool; see serve/kv_cache.py) ---------------
 
 
-def _paged_forward(params, tokens, positions, kv_len, tables, pools,
-                   cfg: ArchConfig, *, causal: bool, backend: Optional[str],
-                   ffn_apply=None):
+def _paged_forward(params, tokens, positions, n_valid, kv_len, tables,
+                   pools, cfg: ArchConfig, *, causal: bool,
+                   backend: Optional[str], ffn_apply=None):
     """Run C tokens per sequence against the paged pools.
 
     tokens/positions: (B, C) — absolute positions (a prefill chunk, or
-    C=1 for decode); kv_len: (B,) valid keys after this chunk's writes;
+    C=1 for decode); n_valid: (B,) real (non-padded) tokens in this
+    chunk; kv_len: (B,) valid keys after this chunk's writes;
     tables: (B, NB) page tables; pools: {"k","v"} (L, N, bs, KV, hd).
 
     Each layer writes the chunk's K/V into its pages *before* attending,
     so queries see themselves through the same page-table path as the
-    rest of the context. Layers run as a Python loop (pools carry a
-    per-layer scatter that scan cannot batch); returns (logits (B,C,V),
-    updated pools).
+    rest of the context. Writes beyond ``n_valid`` (the padded tail of a
+    final prefill chunk) are routed to the null page, so padding never
+    consumes — or corrupts — an allocated page; with on-demand
+    allocation a sequence's table covers exactly its live tokens.
+    Layers run as a Python loop (pools carry a per-layer scatter that
+    scan cannot batch); returns (logits (B,C,V), updated pools).
 
     The serve hot path defers each residual add into the *consumer*
     norm: the MLP output of layer i merges with layer i+1's ln1 (and
@@ -199,6 +203,10 @@ def _paged_forward(params, tokens, positions, kv_len, tables, pools,
     pk, pv = pools["k"], pools["v"]
     block_size = pk.shape[2]
     block_ids, offsets = slots_for_positions(positions, block_size, tables)
+    # mask padded-tail writes to the null page (page 0): positions at or
+    # beyond q_start + n_valid hold no real token.
+    write_end = (q_start + n_valid)[:, None]
+    block_ids = jnp.where(positions < write_end, block_ids, 0)
     leaves = [jax.tree.map(lambda a: a[i], params["layers"])
               for i in range(cfg.n_layers)]
     pending = None                      # deferred MLP residual
@@ -231,21 +239,22 @@ def _paged_forward(params, tokens, positions, kv_len, tables, pools,
     return logits, {"k": pk, "v": pv}
 
 
-def prefill_paged(params, tokens: Array, q_start: Array, tables: Array,
-                  pools, cfg: ArchConfig, *, backend: Optional[str] = None,
-                  ffn_apply=None):
-    """One chunked-prefill step: write + attend C prompt tokens.
+def prefill_paged(params, tokens: Array, q_start: Array, n_valid: Array,
+                  tables: Array, pools, cfg: ArchConfig, *,
+                  backend: Optional[str] = None, ffn_apply=None):
+    """One chunked-prefill step: write + attend C replay tokens.
 
-    tokens (B, C) at absolute positions q_start..q_start+C-1 (B,);
-    returns (logits (B, C, V), pools). Padded tail tokens in the final
-    chunk land at positions >= prompt_len — causality keeps them out of
-    every real query's context, and decode later overwrites their slots.
+    tokens (B, C) at absolute positions q_start..q_start+C-1 (B,), of
+    which the first n_valid (B,) are real; returns (logits (B, C, V),
+    pools). Padded tail tokens in the final chunk write to the null
+    page and contribute no keys (kv_len stops at the last real token);
+    causality keeps real queries' contexts exact either way.
     """
     c = tokens.shape[1]
     positions = q_start[:, None] + jnp.arange(c)[None]
-    kv_len = q_start + c
-    return _paged_forward(params, tokens, positions, kv_len, tables, pools,
-                          cfg, causal=True, backend=backend,
+    kv_len = q_start + n_valid
+    return _paged_forward(params, tokens, positions, n_valid, kv_len,
+                          tables, pools, cfg, causal=True, backend=backend,
                           ffn_apply=ffn_apply)
 
 
@@ -259,6 +268,7 @@ def decode_step_paged(params, pools, token: Array, pos: Array,
     Returns (logits (B, V), pools).
     """
     logits, pools = _paged_forward(
-        params, token[:, None], pos[:, None], pos + 1, tables, pools,
-        cfg, causal=False, backend=backend, ffn_apply=ffn_apply)
+        params, token[:, None], pos[:, None], jnp.ones_like(pos), pos + 1,
+        tables, pools, cfg, causal=False, backend=backend,
+        ffn_apply=ffn_apply)
     return logits[:, 0], pools

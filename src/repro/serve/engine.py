@@ -1,13 +1,19 @@
-"""Serving engines: paged continuous batching (PagedEngine) and the
-legacy dense-slot baseline (Engine).
+"""Serving engines: prefix-cached paged continuous batching (PagedEngine)
+and the legacy dense-slot baseline (Engine).
 
-:class:`PagedEngine` is the production path: a block-paged KV pool
-(serve/kv_cache.py) with token-level continuous batching and chunked
-prefill (serve/scheduler.py). Requests are admitted the moment pages
-free up; decode attention and prefill-chunk attention both stream pages
-through ``flash_e2softmax_pallas``'s paged variants, so SOLE's quantized
-online-softmax correction runs in the serving hot loop exactly as the
-paper's streaming unit intends.
+:class:`PagedEngine` is the production path: a ref-counted, shared-page
+KV pool (serve/kv_cache.py) with token-level continuous batching,
+chunked prefill, prefix caching and recompute-preemption
+(serve/scheduler.py). On admission each prompt is hashed block-by-block
+against the page index; matched pages are attached (refcount++), the
+sequence starts ``prefilled`` at the cached boundary, and only the tail
+is prefilled through the existing ``q_start`` path. Pages are allocated
+on demand per step; a write into a shared page is copy-on-write (the
+cache hands back (src, dst) page copies which the engine replays on
+device before the model step). Decode attention and prefill-chunk
+attention both stream pages through ``flash_e2softmax_pallas``'s paged
+variants, so SOLE's quantized online-softmax correction runs in the
+serving hot loop exactly as the paper's streaming unit intends.
 
 :class:`Engine` keeps the old dense ``batch x max_len`` slot cache and
 the unfused XLA decode path — the memory/throughput baseline that
@@ -17,7 +23,7 @@ compare against.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -26,7 +32,8 @@ import numpy as np
 from repro import ops
 from repro.configs.base import ArchConfig
 from repro.models import api
-from repro.serve.kv_cache import PagedKVCache
+from repro.serve.kv_cache import PagedKVCache, copy_pages
+from repro.serve.sampling import sampler_for
 from repro.serve.scheduler import Scheduler, Sequence
 from repro.sharding import rules as R
 
@@ -37,6 +44,9 @@ Array = jax.Array
 class Request:
     prompt: np.ndarray           # (prompt_len,) int32
     max_new_tokens: int = 16
+    temperature: float = 0.0     # 0 = greedy argmax
+    top_k: int = 0               # 0 = full vocab
+    seed: int = 0                # per-request sampling stream
     out: Optional[List[int]] = None
 
 
@@ -49,14 +59,16 @@ def _run_ctx(rules: Optional[R.Rules]):
 
 
 class PagedEngine:
-    """Continuous-batching engine over a block-paged KV cache.
+    """Continuous-batching engine over a shared-page KV cache.
 
-    Two jitted steps drive the whole loop (pools are donated — the page
-    pool is updated in place):
+    Three jitted steps drive the whole loop (pools are donated — the
+    page pool is updated in place):
 
-      * ``_prefill``: one chunk of one sequence's prompt (B=1, C static);
+      * ``_prefill``: one chunk of one sequence's replay (B=1, C static;
+        padded tail writes route to the null page via ``n_valid``);
       * ``_decode``: one token for up to ``decode_batch`` sequences (lane
-        count static; short batches are padded with null-page lanes).
+        count static; short batches are padded with null-page lanes);
+      * ``_copy``: one page duplicated across layers/pools (COW).
 
     Attention implementations resolve through the ``repro.ops``
     registry: ``backend="pallas"`` streams pages through the paged flash
@@ -71,6 +83,7 @@ class PagedEngine:
                  block_size: int = 16, max_seq_len: int = 256,
                  max_running: int = 8, decode_batch: int = 4,
                  prefill_chunk: int = 16, backend: Optional[str] = None,
+                 prefix_cache: bool = True, watermark: int = 1,
                  rules: Optional[R.Rules] = None):
         if cfg.family != "dense":
             raise ValueError(
@@ -89,18 +102,20 @@ class PagedEngine:
         self.model = api.get_model(cfg)
         self.cache = PagedKVCache(cfg, num_blocks=num_blocks,
                                   block_size=block_size,
-                                  max_seq_len=max_seq_len)
+                                  max_seq_len=max_seq_len,
+                                  prefix_cache=prefix_cache)
         if rules is not None:
             self.cache.shard(rules)
         self.sched = Scheduler(self.cache, max_running=max_running,
-                               prefill_chunk=prefill_chunk)
+                               prefill_chunk=prefill_chunk,
+                               watermark=watermark)
         self.steps = 0
         self.decode_tokens = 0
         self._finished: Dict[int, List[int]] = {}
 
-        def _prefill(params, pools, tokens, q_start, tables):
+        def _prefill(params, pools, tokens, q_start, n_valid, tables):
             return self.model.prefill_paged(params, tokens, q_start,
-                                            tables, pools, cfg,
+                                            n_valid, tables, pools, cfg,
                                             backend=backend)
 
         def _decode(params, pools, token, pos, tables):
@@ -110,32 +125,73 @@ class PagedEngine:
 
         self._prefill = jax.jit(_prefill, donate_argnums=(1,))
         self._decode = jax.jit(_decode, donate_argnums=(1,))
+        self._copy = jax.jit(copy_pages, donate_argnums=(0,))
+
+    def _apply_copies(self, copies: List[Tuple[int, int]]) -> None:
+        """Replay COW page duplications on device, before the step that
+        writes into the fresh private pages. Pairs are padded to a
+        power-of-two count with harmless null->null copies, so the whole
+        batch is one dispatch from a handful of compiled shapes."""
+        if not copies:
+            return
+        n = 1
+        while n < len(copies):
+            n *= 2
+        src, dst = zip(*(copies + [(0, 0)] * (n - len(copies))))
+        self.cache.pools = self._copy(self.cache.pools,
+                                      jnp.asarray(src, jnp.int32),
+                                      jnp.asarray(dst, jnp.int32))
 
     # -- one engine iteration -------------------------------------------------
 
     def _prefill_step(self, seq: Sequence) -> None:
         c = self.sched.prefill_chunk
         start = seq.prefilled
+        replay = seq.replay_tokens
+        real = min(c, len(replay) - start)
+        copies = self.sched.ensure_tokens(seq, start, start + real)
+        if copies is None:
+            return                       # seq itself was preempted
+        self._apply_copies(copies)
         chunk = np.zeros((1, c), np.int32)
-        real = min(c, seq.prompt_len - start)
-        chunk[0, :real] = seq.prompt[start:start + real]
+        chunk[0, :real] = replay[start:start + real]
         table = jnp.asarray(self.cache.batch_tables([seq.seq_id]))
         logits, pools = self._prefill(
             self.params, self.cache.pools, jnp.asarray(chunk),
-            jnp.asarray([start], jnp.int32), table)
+            jnp.asarray([start], jnp.int32), jnp.asarray([real], jnp.int32),
+            table)
         self.cache.pools = pools
         seq.prefilled = start + real
         if not seq.in_prefill:
-            # final chunk: greedy-sample the first generated token from
-            # the last *real* prompt position's logits.
-            seq.out.append(int(jnp.argmax(logits[0, real - 1])))
+            self.cache.register_prompt(seq.seq_id, seq.prompt,
+                                       seq.prefix_keys)
+            if not seq.out:
+                # fresh sequence: sample the first generated token from
+                # the last *real* prompt position's logits. A resumed
+                # sequence already holds its next feed token in out.
+                seq.out.append(seq.sampler(np.asarray(logits[0, real - 1])))
 
-    def _decode_step(self, batch: List[Sequence]) -> None:
+    def _decode_step(self) -> None:
+        lanes: List[Sequence] = []
+        for seq in self.sched.decode_batch(self.decode_batch):
+            if seq not in self.sched.running:
+                continue                 # preempted by an earlier lane
+            pos = seq.prompt_len + len(seq.out) - 1
+            copies = self.sched.ensure_tokens(seq, pos, pos + 1)
+            if copies is None:
+                continue
+            self._apply_copies(copies)
+            lanes.append(seq)
+        # ensure_tokens for a later lane may have preempted an earlier
+        # one whose pages are gone — drop it before any device write.
+        lanes = [s for s in lanes if s in self.sched.running]
+        if not lanes:
+            return
         d = self.decode_batch
         token = np.zeros((d,), np.int32)
         pos = np.zeros((d,), np.int32)
         sids: List[Optional[int]] = [None] * d
-        for i, seq in enumerate(batch):
+        for i, seq in enumerate(lanes):
             token[i] = seq.out[-1]
             pos[i] = seq.prompt_len + len(seq.out) - 1
             sids[i] = seq.seq_id
@@ -144,38 +200,51 @@ class PagedEngine:
                                      jnp.asarray(token), jnp.asarray(pos),
                                      tables)
         self.cache.pools = pools
-        next_tok = np.asarray(jnp.argmax(logits, -1))
-        for i, seq in enumerate(batch):
-            seq.out.append(int(next_tok[i]))
+        rows = np.asarray(logits)
+        for i, seq in enumerate(lanes):
+            seq.out.append(seq.sampler(rows[i]))
+            # the decode step wrote the fed token's KV at pos[i]:
+            # prefilled tracks written KV so replay stays in sync.
+            seq.prefilled = int(pos[i]) + 1
             self.decode_tokens += 1
 
-    def step(self) -> None:
-        """One engine iteration: admit, one prefill chunk, one decode
-        token for the running batch, reclaim finished sequences."""
-        self.sched.admit()
-        seq = self.sched.next_prefill()
-        if seq is not None:
-            self._prefill_step(seq)
-        batch = self.sched.decode_batch(self.decode_batch)
-        if batch:
-            self._decode_step(batch)
+    def _reap_done(self) -> None:
         for seq in list(self.sched.running):
             if seq.done:
                 self._finished[seq.seq_id] = seq.out
                 self.sched.finish(seq)
+
+    def step(self) -> None:
+        """One engine iteration: admit, one prefill chunk, one decode
+        token for the running batch, reclaim finished sequences.
+        Finished sequences are reaped right after prefill too, so their
+        pages fund the decode batch's on-demand growth."""
+        self.sched.admit()
+        seq = self.sched.next_prefill()
+        if seq is not None:
+            self._prefill_step(seq)
+        self._reap_done()
+        self._decode_step()
+        self._reap_done()
         self.steps += 1
 
     # -- public API -----------------------------------------------------------
 
     def generate(self, requests: List[Request]) -> List[List[int]]:
         """Serve all requests to completion; outputs in request order."""
-        # validate the whole set before enqueueing anything, so a
-        # never-fits request cannot strand earlier submissions.
-        for r in requests:
-            self.sched.check_fits(r.prompt, r.max_new_tokens)
+        # submit() is the single validation site; on failure, name the
+        # offending request and unwind this wave's earlier submissions
+        # so a never-fits request cannot strand them queued.
+        order: List[int] = []
+        for i, r in enumerate(requests):
+            try:
+                order.append(self.sched.submit(
+                    r.prompt, r.max_new_tokens,
+                    sampler=sampler_for(r, self.cfg.vocab_size)))
+            except ValueError as e:
+                self.sched.abandon(order)
+                raise ValueError(f"request {i}: {e}") from None
         meshctx, rulectx = _run_ctx(self.rules)
-        order = [self.sched.submit(r.prompt, r.max_new_tokens)
-                 for r in requests]
         with meshctx, rulectx:
             while self.sched.has_work:
                 self.step()
@@ -183,11 +252,42 @@ class PagedEngine:
         # past wave's outputs.
         return [self._finished.pop(sid) for sid in order]
 
+    def stats(self) -> Dict[str, object]:
+        """Serving counters: prefix-cache hits, COW/eviction/preemption
+        activity, and pool occupancy."""
+        c, s = self.cache, self.sched
+        return {
+            "prefix_cache": c.prefix_cache,
+            "prefix_hit_rate": round(c.prefix_hit_rate(), 4),
+            "prefix_hit_tokens": c.prefix_hit_tokens,
+            "prefix_query_tokens": c.prefix_query_tokens,
+            "cow_copies": c.cow_copies,
+            "evictions": c.evictions,
+            "preemptions": s.preemptions,
+            "cached_blocks": c.cached_blocks,
+            "free_blocks": c.free_blocks,
+            "blocks_in_use": c.blocks_in_use,
+            "peak_blocks_in_use": c.peak_blocks_in_use,
+            "utilization": round(c.utilization(), 4),
+            "admitted": s.admitted,
+            "finished": s.finished,
+            "steps": self.steps,
+            "decode_tokens": self.decode_tokens,
+        }
+
+    def reset_stats(self) -> None:
+        """Zero the serving counters (cached pages stay resident)."""
+        self.cache.reset_stats()
+        self.sched.preemptions = 0
+        self.sched.admitted = 0
+        self.sched.finished = 0
+        self.steps = 0
+        self.decode_tokens = 0
+
 
 class Engine:
     def __init__(self, cfg: ArchConfig, params, *, batch_size: int = 4,
-                 max_len: int = 256, rules: Optional[R.Rules] = None,
-                 greedy: bool = True):
+                 max_len: int = 256, rules: Optional[R.Rules] = None):
         if cfg.family not in ("dense", "moe", "ssm", "hybrid"):
             raise ValueError(f"Engine serves LM families, got {cfg.family}")
         self.cfg = cfg
@@ -196,7 +296,6 @@ class Engine:
         self.max_len = max_len
         self.rules = rules
         self.model = api.get_model(cfg)
-        self.greedy = greedy
 
         def _decode(params, cache, token, pos):
             return self.model.decode_step(params, cache, token, pos, cfg)
@@ -219,21 +318,30 @@ class Engine:
 
     def _generate_batch(self, chunk: List[Request]) -> List[List[int]]:
         b = len(chunk)
+        samplers = [sampler_for(r, self.cfg.vocab_size) for r in chunk]
         plen = max(len(r.prompt) for r in chunk)
         toks = np.zeros((b, plen), np.int32)
         for j, r in enumerate(chunk):
             toks[j, plen - len(r.prompt):] = r.prompt  # left-pad
         logits, cache = self._prefill(self.params, jnp.asarray(toks))
-        token = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+        rows = np.asarray(logits[:, -1])
+        results = [[samplers[j](rows[j])] for j in range(b)]
+        token = jnp.asarray(np.array([r[-1] for r in results], np.int32))
         max_new = max(r.max_new_tokens for r in chunk)
-        results = [[int(token[j])] for j in range(b)]
         pos = plen
         for _ in range(max_new - 1):
             logits, cache = self._decode(self.params, cache, token,
                                          jnp.asarray(pos, jnp.int32))
-            token = jnp.argmax(logits, -1).astype(jnp.int32)
+            rows = np.asarray(logits)
+            nxt = np.zeros((b,), np.int32)
             for j in range(b):
                 if len(results[j]) < chunk[j].max_new_tokens:
-                    results[j].append(int(token[j]))
+                    results[j].append(samplers[j](rows[j]))
+                    nxt[j] = results[j][-1]
+                else:
+                    # finished lane: keep feeding greedy continuations
+                    # so its KV stream stays deterministic for others.
+                    nxt[j] = int(np.argmax(rows[j]))
+            token = jnp.asarray(nxt)
             pos += 1
         return results

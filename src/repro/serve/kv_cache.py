@@ -1,25 +1,51 @@
-"""Block-paged KV cache for the serve engine (vLLM-style PagedAttention).
+"""Ref-counted, prefix-cached block-paged KV cache (vLLM-style).
 
 The pool is one device allocation of ``num_blocks`` fixed-size pages per
 layer; sequences own *lists of page ids* (host-side page tables) instead
-of a dense ``max_len`` cache region, so HBM is committed per token
-actually generated, not per worst-case slot. Page 0 is reserved as the
-**null page**: page-table padding and masked-lane writes route there, so
-every gather/scatter stays in bounds without host-side branching.
+of a dense ``max_len`` cache region. Page 0 is reserved as the **null
+page**: page-table padding and masked-lane writes route there, so every
+gather/scatter stays in bounds without host-side branching.
+
+On top of the PR-1 paging this adds the three mechanisms that let pages
+be *shared* between sequences:
+
+* **Ref-counted pages + content-hash index.** Every block-aligned token
+  prefix of a finished prefill is chain-hashed and registered in
+  ``_index`` (including the final *partial* block, hashed over exactly
+  the prompt tokens it holds). A later request whose prompt walks the
+  same chain attaches the cached pages (refcount++) and prefills only
+  the tail through the existing ``q_start`` path.
+* **Copy-on-write.** A write into a page with refcount > 1 first copies
+  the page to a private one (``append_tokens`` returns the (src, dst)
+  pairs; the engine replays them on device before the model step).
+  Writes into refcount-1 pages go in place — including the recompute of
+  the last prompt token of a fully-matched prompt, which rewrites
+  identical content inside the hashed extent.
+* **LRU eviction.** When a registered page's refcount drops to 0 it is
+  *not* freed: it moves to an LRU evictable list and stays resident so
+  future prompts can hit it. Allocation takes from the free list first
+  and evicts LRU cached pages only under pressure (unregistering them).
+
+Allocation itself is now **on demand**: there is no per-sequence
+reservation call; ``append_tokens(seq_id, start, end)`` grows the page
+table just enough to cover the token range about to be written and
+reports failure (None) when the pool — free plus evictable — cannot,
+which the scheduler turns into a preemption.
 
 This is the memory half of SOLE's co-design argument carried to serving:
 the paper stores Softmax intermediates in 4-bit codes because the memory
-path, not the multiplier, bounds the unit; here the KV pool (optionally
-int8 via ``cfg.kv_cache_dtype``) is paged so the serving memory path is
-bounded by live tokens, and the flash kernel consumes pages directly via
-its page-table index maps (no contiguous gather ever materializes).
+path, not the multiplier, bounds the unit; here the (optionally int8)
+KV pool is the binding serving resource, so capacity is committed per
+live token and identical prefixes are stored once.
 
-Device state is functional: jitted steps take the pool dict and return an
-updated one; only the free list / page tables live host-side.
+Device state is functional: jitted steps take the pool dict and return
+an updated one; only the free/evictable lists, refcounts, hash index and
+page tables live host-side.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence
+from collections import OrderedDict
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -43,11 +69,11 @@ def cdiv(a: int, b: int) -> int:
 
 
 class PagedKVCache:
-    """Fixed pool of KV pages + host-side page tables and free list."""
+    """Fixed pool of KV pages + host-side tables, refcounts and index."""
 
     def __init__(self, cfg: ArchConfig, *, num_blocks: int,
                  block_size: int = 16, max_seq_len: int = 512,
-                 dtype=None):
+                 dtype=None, prefix_cache: bool = True):
         if num_blocks < 2:
             raise ValueError("need >= 2 blocks (page 0 is the null page)")
         from repro.models.layers import kv_store_dtype
@@ -56,6 +82,7 @@ class PagedKVCache:
         self.num_blocks = num_blocks
         self.max_blocks_per_seq = cdiv(max_seq_len, block_size)
         self.max_seq_len = max_seq_len
+        self.prefix_cache = prefix_cache
         dt = dtype or kv_store_dtype(cfg)
         shape = (cfg.n_layers, num_blocks, block_size,
                  cfg.n_kv_heads, cfg.head_dim)
@@ -63,8 +90,21 @@ class PagedKVCache:
                                         "v": jnp.zeros(shape, dt)}
         # LIFO free list; page 0 reserved as the null page.
         self._free: List[int] = list(range(num_blocks - 1, 0, -1))
+        # refcount-0 registered pages, LRU order (oldest first).
+        self._evictable: "OrderedDict[int, int]" = OrderedDict()
+        self._index: Dict[int, int] = {}        # chain hash -> page id
+        self._registered: Dict[int, int] = {}   # page id -> chain hash
+        # page id -> (parent page id, block token bytes): the content
+        # proof a lookup verifies on every hash hit, so a 64-bit hash
+        # collision degrades to a cache miss, never to foreign KV.
+        self._entries: Dict[int, Tuple[Optional[int], bytes]] = {}
+        self._ref: List[int] = [0] * num_blocks
         self._tables: Dict[int, List[int]] = {}
         self.peak_blocks_in_use = 0
+        self.evictions = 0
+        self.cow_copies = 0
+        self.prefix_hit_tokens = 0
+        self.prefix_query_tokens = 0
 
     def shard(self, rules) -> None:
         """Lay the pools out per the active sharding rules (PAGED_KV_AXES:
@@ -82,8 +122,18 @@ class PagedKVCache:
         return len(self._free)
 
     @property
+    def cached_blocks(self) -> int:
+        """Resident refcount-0 pages, reclaimable under pressure."""
+        return len(self._evictable)
+
+    @property
     def blocks_in_use(self) -> int:
-        return (self.num_blocks - 1) - len(self._free)
+        """Pages referenced by at least one live sequence."""
+        return (self.num_blocks - 1) - len(self._free) - len(self._evictable)
+
+    def free_capacity(self) -> int:
+        """Pages an allocation can draw on: free + evictable."""
+        return len(self._free) + len(self._evictable)
 
     def utilization(self) -> float:
         return self.blocks_in_use / max(self.num_blocks - 1, 1)
@@ -91,31 +141,208 @@ class PagedKVCache:
     def blocks_for_tokens(self, num_tokens: int) -> int:
         return cdiv(num_tokens, self.block_size)
 
-    def can_allocate(self, num_tokens: int) -> bool:
-        return self.blocks_for_tokens(num_tokens) <= self.free_blocks
+    def is_cached(self, page_id: int) -> bool:
+        return page_id in self._evictable
+
+    def prefix_hit_rate(self) -> float:
+        return self.prefix_hit_tokens / max(self.prefix_query_tokens, 1)
+
+    def reset_stats(self) -> None:
+        self.evictions = 0
+        self.cow_copies = 0
+        self.prefix_hit_tokens = 0
+        self.prefix_query_tokens = 0
+        self.peak_blocks_in_use = self.blocks_in_use
+
+    def check_refcounts(self) -> None:
+        """Invariant sweep (tests): refcounts match the page tables and
+        are never negative; free/evictable/table sets partition pages."""
+        counts = [0] * self.num_blocks
+        for table in self._tables.values():
+            for pid in table:
+                counts[pid] += 1
+        assert self._ref == counts, (self._ref, counts)
+        assert all(r >= 0 for r in self._ref)
+        for pid in self._evictable:
+            assert self._ref[pid] == 0 and pid in self._registered
+        for pid in self._free:
+            assert self._ref[pid] == 0 and pid not in self._registered
+        resident = set(self._free) | set(self._evictable)
+        for table in self._tables.values():
+            assert resident.isdisjoint(table)
+        for h, pid in self._index.items():
+            assert self._registered.get(pid) == h
+            assert pid in self._entries
+        assert set(self._entries) == set(self._registered)
+
+    # -- content-hash prefix index --------------------------------------------
+
+    def prefix_keys(self, prompt: np.ndarray) -> List[Tuple[int, bytes]]:
+        """(chain hash, block token bytes) per block-aligned prefix, the
+        final partial block keyed over exactly the prompt tokens it
+        holds. Hash-chain identity plus per-hit byte verification; the
+        scheduler caches this per sequence so re-admission attempts
+        don't re-hash long prompts every engine step."""
+        prompt = np.ascontiguousarray(np.asarray(prompt, np.int32))
+        bs = self.block_size
+        keys: List[Tuple[int, bytes]] = []
+        h: Optional[int] = None
+        for i in range(cdiv(len(prompt), bs)):
+            seg = prompt[i * bs:min((i + 1) * bs, len(prompt))].tobytes()
+            h = hash((h, seg))
+            keys.append((h, seg))
+        return keys
+
+    def lookup_prefix(self, prompt: np.ndarray,
+                      keys: Optional[List[Tuple[int, bytes]]] = None,
+                      ) -> Tuple[List[int], int]:
+        """Longest cached chain for this prompt: (page ids, token count).
+
+        Every hash hit is verified against the registered page's
+        ``(parent page, block bytes)`` entry — the parent link pins the
+        whole prefix content inductively, so a hash collision is a miss,
+        never a wrong match. The match is capped at ``len(prompt) - 1``
+        so the final prompt position is always recomputed — its logits
+        seed generation. A fully-matched final page is still returned
+        (its earlier slots are valid); the recompute overwrites one
+        slot, COW-protected if the page is shared.
+        """
+        plen = len(prompt)
+        if not self.prefix_cache or plen <= 1:
+            return [], 0
+        pages: List[int] = []
+        matched = 0
+        prev: Optional[int] = None
+        for i, (h, seg) in enumerate(keys or self.prefix_keys(prompt)):
+            pid = self._index.get(h)
+            if pid is None or self._entries.get(pid) != (prev, seg):
+                break
+            pages.append(pid)
+            matched = min((i + 1) * self.block_size, plen)
+            prev = pid
+        if matched >= plen:
+            matched = plen - 1
+        if pages and matched <= (len(pages) - 1) * self.block_size:
+            # capped below the last page's first slot: it contributes
+            # nothing valid, keeping it would only pin it.
+            pages.pop()
+        return pages, matched
+
+    def attach(self, seq_id: int, pages: Sequence[int], *,
+               query_tokens: int = 0, hit_tokens: int = 0) -> None:
+        """Create ``seq_id``'s table seeded with cached ``pages``
+        (refcount++, pinned out of the evictable list)."""
+        if seq_id in self._tables:
+            raise ValueError(f"seq {seq_id} already has pages")
+        for pid in pages:
+            if self._ref[pid] == 0:
+                self._evictable.pop(pid)
+            self._ref[pid] += 1
+        self._tables[seq_id] = list(pages)
+        self.prefix_query_tokens += query_tokens
+        self.prefix_hit_tokens += hit_tokens
+        self.peak_blocks_in_use = max(self.peak_blocks_in_use,
+                                      self.blocks_in_use)
+
+    def register_prompt(self, seq_id: int, prompt: np.ndarray,
+                        keys: Optional[List[Tuple[int, bytes]]] = None,
+                        ) -> None:
+        """Index ``seq_id``'s prompt pages by content so future prompts
+        can share them. Called once the prompt is fully written; losers
+        of a same-content race simply keep their pages private. The walk
+        mirrors lookup verification: registration stops at the first
+        level whose canonical entry is not byte-identical to this
+        prompt, so a deeper page can never chain onto a colliding or
+        diverged parent."""
+        if not self.prefix_cache:
+            return
+        table = self._tables[seq_id]
+        prev: Optional[int] = None
+        for i, (h, seg) in enumerate(keys or self.prefix_keys(prompt)):
+            pid = self._index.get(h)
+            if pid is not None:
+                if self._entries.get(pid) != (prev, seg):
+                    break                  # collision: stop indexing deeper
+                prev = pid
+                continue
+            mine = table[i]
+            if self._registered.get(mine) is not None:
+                break                      # already canonical elsewhere
+            self._index[h] = mine
+            self._registered[mine] = h
+            self._entries[mine] = (prev, seg)
+            prev = mine
 
     # -- allocation -----------------------------------------------------------
 
-    def allocate(self, seq_id: int, num_tokens: int) -> bool:
-        """Reserve pages covering ``num_tokens`` for ``seq_id``.
+    def _acquire(self) -> int:
+        """One fresh private page: free list first, else evict the LRU
+        cached page (unregistering it from the index)."""
+        if self._free:
+            pid = self._free.pop()
+        else:
+            pid, h = self._evictable.popitem(last=False)
+            del self._index[h]
+            del self._registered[pid]
+            del self._entries[pid]
+            self.evictions += 1
+        self._ref[pid] = 1
+        return pid
 
-        All-or-nothing; returns False (no allocation) if the pool cannot
-        cover the request or the sequence would exceed max_seq_len.
+    def append_tokens(self, seq_id: int, start: int,
+                      end: int) -> Optional[List[Tuple[int, int]]]:
+        """Make token positions ``[start, end)`` privately writable.
+
+        Grows the table on demand to cover ``end`` tokens and
+        copy-on-writes any shared page (refcount > 1) the write range
+        touches. Returns the (src, dst) page copies the engine must
+        replay on device before writing, or None (no state change) if
+        the pool cannot cover the growth — the preemption signal.
         """
-        n = self.blocks_for_tokens(num_tokens)
-        if seq_id in self._tables:
-            raise ValueError(f"seq {seq_id} already has pages")
-        if n > self.max_blocks_per_seq or n > self.free_blocks:
-            return False
-        self._tables[seq_id] = [self._free.pop() for _ in range(n)]
+        table = self._tables[seq_id]
+        bs = self.block_size
+        need = cdiv(end, bs)
+        if need > self.max_blocks_per_seq:
+            raise ValueError(
+                f"seq {seq_id} would span {need} pages "
+                f"(max_blocks_per_seq {self.max_blocks_per_seq})")
+        grow = max(0, need - len(table))
+        cow = [i for i in range(start // bs, cdiv(end, bs))
+               if i < len(table) and self._ref[table[i]] > 1]
+        if grow + len(cow) > self.free_capacity():
+            return None
+        copies: List[Tuple[int, int]] = []
+        for i in cow:
+            old = table[i]
+            new = self._acquire()
+            copies.append((old, new))
+            self._ref[old] -= 1
+            table[i] = new
+            self.cow_copies += 1
+        for _ in range(grow):
+            table.append(self._acquire())
         self.peak_blocks_in_use = max(self.peak_blocks_in_use,
                                       self.blocks_in_use)
-        return True
+        return copies
 
-    def free_seq(self, seq_id: int) -> None:
-        """Return a finished sequence's pages to the pool."""
-        for blk in self._tables.pop(seq_id):
-            self._free.append(blk)
+    def release(self, seq_id: int) -> None:
+        """Drop ``seq_id``'s references (finish or preemption). Pages
+        reaching refcount 0 go back to the free list — unless they are
+        registered in the prefix index, in which case they stay resident
+        on the evictable LRU list for future prompts to hit. Pages are
+        enqueued tail-first so pool pressure evicts chain *suffixes*
+        before the prefixes they hang off — evicting block 0 first
+        would orphan every deeper page of the chain as unmatchable
+        resident dead weight."""
+        for pid in reversed(self._tables.pop(seq_id)):
+            self._ref[pid] -= 1
+            assert self._ref[pid] >= 0, f"negative refcount on page {pid}"
+            if self._ref[pid] == 0:
+                h = self._registered.get(pid)
+                if h is not None:
+                    self._evictable[pid] = h      # MRU end
+                else:
+                    self._free.append(pid)
 
     def table_row(self, seq_id: int) -> np.ndarray:
         """(max_blocks_per_seq,) int32 page table, null-page padded."""
@@ -158,6 +385,15 @@ def slots_for_positions(positions: Array, block_size: int,
     block_ids = jnp.take_along_axis(tables, blk_idx, axis=1)
     offsets = positions % block_size
     return block_ids, offsets
+
+
+def copy_pages(pools: Dict[str, Array], src: Array,
+               dst: Array) -> Dict[str, Array]:
+    """COW on device: duplicate pages ``src`` into ``dst`` across all
+    layers of every pool (int32 id vectors — padding pairs point both
+    ids at the null page 0; jitted by the engine)."""
+    return {name: pool.at[:, dst].set(pool[:, src])
+            for name, pool in pools.items()}
 
 
 def gather_kv(pool: Array, table: Array) -> Array:

@@ -1,0 +1,61 @@
+"""Per-sequence token sampling for the serve engines.
+
+Each request carries ``(temperature, top_k, seed)`` and gets its own
+:class:`Sampler` — a seeded categorical sampler over the final-position
+logits, greedy argmax when ``temperature == 0``. The sampler owns a
+private ``numpy`` Generator, so its draw stream depends only on the seed
+and on how many tokens *this* sequence has sampled — never on batch
+composition, chunk boundaries, or scheduling. That is what makes
+warm-cache, cold-cache and preemption-forced runs replayable: preemption
+recompute replays stored tokens without consuming draws, so the stream
+stays aligned.
+
+Sampling runs host-side on the (small) logits rows the engines already
+pull back per step; the padded-vocab tail is masked before normalizing.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class Sampler:
+    """Stateful per-sequence sampler: greedy or seeded categorical."""
+
+    def __init__(self, temperature: float = 0.0, top_k: int = 0,
+                 seed: int = 0, vocab_size: int = 0):
+        if temperature < 0:
+            raise ValueError(f"temperature must be >= 0, got {temperature}")
+        if top_k < 0:
+            raise ValueError(f"top_k must be >= 0 (0 = all), got {top_k}")
+        self.temperature = float(temperature)
+        self.top_k = int(top_k)
+        self.vocab_size = int(vocab_size)
+        self._rng = np.random.default_rng(seed)
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature == 0.0
+
+    def __call__(self, logits: np.ndarray) -> int:
+        """One token id from a (padded_vocab,) logits row."""
+        z = np.asarray(logits, np.float64)
+        if self.vocab_size and self.vocab_size < len(z):
+            z = z[:self.vocab_size]
+        if self.greedy:
+            return int(np.argmax(z))
+        z = z / self.temperature
+        if 0 < self.top_k < len(z):
+            kth = np.partition(z, -self.top_k)[-self.top_k]
+            z = np.where(z >= kth, z, -np.inf)
+        z = z - z.max()
+        p = np.exp(z)
+        p /= p.sum()
+        return int(self._rng.choice(len(p), p=p))
+
+
+def sampler_for(request, vocab_size: int = 0) -> Sampler:
+    """Sampler from a serve Request's (temperature, top_k, seed)."""
+    return Sampler(temperature=getattr(request, "temperature", 0.0),
+                   top_k=getattr(request, "top_k", 0),
+                   seed=getattr(request, "seed", 0),
+                   vocab_size=vocab_size)

@@ -1,44 +1,80 @@
-"""Admission/eviction scheduler: token-level continuous batching.
+"""Admission/preemption scheduler: token-level continuous batching over
+a shared-page KV pool.
 
-Requests wait in a FIFO queue and are admitted the moment the page pool
-can cover their full footprint (prompt rounded up to the prefill-chunk
-boundary, plus max_new_tokens) — not when a batch slot opens. Finished
-sequences return their pages immediately, which can admit several queued
-requests mid-step. Long prompts are prefilled in fixed-size chunks, one
-chunk per engine step, so a 10k-token prompt interleaves with ongoing
-decode instead of stalling the batch (chunked prefill).
+Requests wait in a FIFO queue. Admission is **optimistic**: instead of
+reserving a worst-case footprint, a request is admitted when the pool's
+drawable capacity (free + evictable pages) covers its *prompt tail* —
+the part of its prompt the prefix cache cannot supply — plus a small
+watermark. Pages are then allocated on demand, one prefill chunk or
+decode token at a time (:meth:`ensure_tokens`).
 
-The reservation is conservative (worst-case footprint at admission), so
-no mid-stream preemption/swapping is ever needed; eviction is exactly
-page reclamation at completion.
+The backstop for optimism is **recompute-preemption**: when a growth
+step cannot be covered, the youngest running sequence is preempted —
+its page references are released (private pages return to the free
+list; prefix-cached pages stay resident) and it re-enters the *front*
+of the waiting queue with its generated tokens intact. On re-admission
+it replays ``prompt + out[:-1]`` through chunked prefill (re-matching
+whatever prefix is still cached) and resumes decoding; in exact softmax
+mode the replay is token-identical to the uninterrupted run.
+
+Long prompts are prefilled in fixed-size chunks, one chunk per engine
+step, so a 10k-token prompt interleaves with ongoing decode instead of
+stalling the batch (chunked prefill).
 """
 from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Deque, List, Optional
+from typing import Deque, List, Optional, Tuple
 
 import numpy as np
 
-from repro.serve.kv_cache import PagedKVCache, cdiv
+from repro.serve.kv_cache import PagedKVCache
 
 
-@dataclasses.dataclass
-class Sequence:
-    """One in-flight request: prompt, progress, and output tokens."""
+@dataclasses.dataclass(eq=False)       # identity semantics: sequences are
+class Sequence:                        # tracked in running/waiting by object
+    """One in-flight request: prompt, progress, outputs, sampler."""
     seq_id: int
     prompt: np.ndarray                 # (prompt_len,) int32
     max_new_tokens: int
-    prefilled: int = 0                 # prompt tokens already written
+    sampler: Optional[object] = None   # serve.sampling.Sampler
+    prefilled: int = 0                 # replay tokens already written
     out: List[int] = dataclasses.field(default_factory=list)
+    restarts: int = 0                  # recompute-preemption count
+    # cache.prefix_keys(prompt), computed once at first admission try so
+    # a long prompt stuck at the queue head isn't re-hashed every step.
+    prefix_keys: Optional[List[Tuple[int, bytes]]] = None
+    _replay: Optional[np.ndarray] = dataclasses.field(default=None,
+                                                      repr=False)
 
     @property
     def prompt_len(self) -> int:
         return len(self.prompt)
 
     @property
+    def replay_len(self) -> int:
+        """Tokens whose KV must exist before the next decode feed: the
+        prompt, plus all generated tokens except the one about to be
+        fed (its KV is written by the decode step itself)."""
+        return self.prompt_len + max(len(self.out) - 1, 0)
+
+    @property
+    def replay_tokens(self) -> np.ndarray:
+        """(replay_len,) token stream a (re-)prefill must write. Cached
+        until `out` grows, so chunked prefill of a long replay slices
+        one build instead of re-concatenating per chunk."""
+        if self._replay is None or len(self._replay) != self.replay_len:
+            if self.out:
+                self._replay = np.concatenate(
+                    [self.prompt, np.asarray(self.out[:-1], np.int32)])
+            else:
+                self._replay = self.prompt
+        return self._replay
+
+    @property
     def in_prefill(self) -> bool:
-        return self.prefilled < self.prompt_len
+        return self.prefilled < self.replay_len
 
     @property
     def done(self) -> bool:
@@ -47,23 +83,28 @@ class Sequence:
 
 
 class Scheduler:
-    """Pairs the waiting queue with the page pool."""
+    """Pairs the waiting queue with the shared-page pool."""
 
     def __init__(self, cache: PagedKVCache, *, max_running: int,
-                 prefill_chunk: int):
+                 prefill_chunk: int, watermark: int = 1):
         self.cache = cache
         self.max_running = max_running
         self.prefill_chunk = prefill_chunk
+        self.watermark = watermark
         self.waiting: Deque[Sequence] = deque()
         self.running: List[Sequence] = []
         self._next_id = 0
         self.admitted = 0
         self.finished = 0
+        self.preemptions = 0
+
+    # -- intake ---------------------------------------------------------------
 
     def check_fits(self, prompt: np.ndarray, max_new_tokens: int) -> None:
-        """Raise if this request's footprint can never be allocated."""
-        seq = Sequence(-1, np.asarray(prompt, np.int32), max_new_tokens)
-        need = self.cache.blocks_for_tokens(self._footprint(seq))
+        """Raise if this request's footprint can never be allocated,
+        even with the whole pool (and every cached page) evicted."""
+        footprint = len(prompt) + max(max_new_tokens - 1, 0)
+        need = self.cache.blocks_for_tokens(footprint)
         limit = min(self.cache.max_blocks_per_seq,
                     self.cache.num_blocks - 1)
         if need > limit:
@@ -71,35 +112,103 @@ class Scheduler:
                 f"request footprint of {need} pages can never fit "
                 f"(per-seq/pool limit {limit})")
 
-    def submit(self, prompt: np.ndarray, max_new_tokens: int) -> int:
+    def submit(self, prompt: np.ndarray, max_new_tokens: int,
+               sampler: Optional[object] = None) -> int:
+        """Queue a request, failing fast if it can never fit. This is
+        the single validation site; ``PagedEngine.generate`` wraps the
+        error with the request index and unwinds its earlier
+        submissions. Without an explicit sampler the sequence decodes
+        greedily."""
         self.check_fits(prompt, max_new_tokens)
+        if sampler is None:
+            from repro.serve.sampling import Sampler
+            sampler = Sampler(vocab_size=self.cache.cfg.vocab_size)
         seq = Sequence(self._next_id, np.asarray(prompt, np.int32),
-                       max_new_tokens)
+                       max_new_tokens, sampler=sampler)
         self._next_id += 1
         self.waiting.append(seq)
         return seq.seq_id
 
-    def _footprint(self, seq: Sequence) -> int:
-        """Worst-case tokens ever written for this sequence: the prompt
-        rounded up to the chunk boundary (padded final-chunk writes land
-        in-sequence), or prompt + generation, whichever is larger."""
-        padded_prompt = cdiv(seq.prompt_len, self.prefill_chunk) \
-            * self.prefill_chunk
-        return max(padded_prompt, seq.prompt_len + seq.max_new_tokens)
+    def abandon(self, seq_ids) -> None:
+        """Drop still-waiting submissions (generate() unwinds a wave
+        whose later request failed validation)."""
+        drop = set(seq_ids)
+        self.waiting = deque(s for s in self.waiting
+                             if s.seq_id not in drop)
+
+    # -- admission ------------------------------------------------------------
 
     def admit(self) -> int:
-        """FIFO-admit waiting requests while pages + a lane are free."""
+        """FIFO-admit waiting requests while a lane is free and the pool
+        can plausibly cover the un-cached prompt tail + watermark.
+
+        Each admission hashes the prompt against the prefix index and
+        attaches the matched pages (refcount++), so the sequence starts
+        with ``prefilled`` at the cached boundary and only the tail goes
+        through chunked prefill. When nothing is running the head
+        request is admitted unconditionally (liveness: no other
+        sequence can free pages for it)."""
         n = 0
-        while (self.waiting and len(self.running) < self.max_running
-               and self.cache.allocate(self.waiting[0].seq_id,
-                                       self._footprint(self.waiting[0]))):
+        while self.waiting and len(self.running) < self.max_running:
+            seq = self.waiting[0]
+            if self.cache.prefix_cache and seq.prefix_keys is None:
+                seq.prefix_keys = self.cache.prefix_keys(seq.prompt)
+            pages, matched = self.cache.lookup_prefix(seq.prompt,
+                                                      seq.prefix_keys)
+            need_new = max(0, self.cache.blocks_for_tokens(seq.replay_len)
+                           - len(pages))
+            avail = (self.cache.free_blocks + self.cache.cached_blocks
+                     - sum(1 for p in pages if self.cache.is_cached(p)))
+            if self.running and need_new + self.watermark > avail:
+                break
+            # re-admissions after preemption re-attach the sequence's
+            # own registered pages; count only first admissions so the
+            # hit-rate reports *cross-request* sharing.
+            first = seq.restarts == 0
+            self.cache.attach(seq.seq_id, pages,
+                              query_tokens=seq.prompt_len if first else 0,
+                              hit_tokens=matched if first else 0)
+            seq.prefilled = matched
             self.running.append(self.waiting.popleft())
             self.admitted += 1
             n += 1
         return n
 
+    # -- on-demand growth + preemption ----------------------------------------
+
+    def ensure_tokens(self, seq: Sequence, start: int,
+                      end: int) -> Optional[List[Tuple[int, int]]]:
+        """Make positions ``[start, end)`` writable for ``seq``, growing
+        its table on demand. On pool exhaustion, preempt the youngest
+        running sequence and retry; preempting ``seq`` itself (it was
+        the youngest) returns None — the engine skips its step.
+
+        Returns the COW (src, dst) page copies the engine must replay on
+        device before the model step writes."""
+        while True:
+            copies = self.cache.append_tokens(seq.seq_id, start, end)
+            if copies is not None:
+                return copies
+            victim = self.running[-1]
+            self.preempt(victim)
+            if victim is seq:
+                return None
+
+    def preempt(self, seq: Sequence) -> None:
+        """Recompute-preemption: release page refs (private pages free
+        immediately; prefix-cached pages stay resident) and push the
+        sequence to the *front* of the waiting queue, outputs intact."""
+        self.running.remove(seq)
+        self.cache.release(seq.seq_id)
+        seq.prefilled = 0
+        seq.restarts += 1
+        self.waiting.appendleft(seq)
+        self.preemptions += 1
+
+    # -- step composition -----------------------------------------------------
+
     def next_prefill(self) -> Optional[Sequence]:
-        """Oldest running sequence that still has prompt left to write."""
+        """Oldest running sequence that still has replay left to write."""
         for seq in self.running:
             if seq.in_prefill:
                 return seq
@@ -116,9 +225,10 @@ class Scheduler:
                 if not s.in_prefill and not s.done][:limit]
 
     def finish(self, seq: Sequence) -> None:
-        """Reclaim pages; freed pages make room for the next admit()."""
+        """Release page refs; freed/evictable pages make room for the
+        next admit() — and registered prompt pages stay hot."""
         self.running.remove(seq)
-        self.cache.free_seq(seq.seq_id)
+        self.cache.release(seq.seq_id)
         self.finished += 1
 
     @property

@@ -1,0 +1,312 @@
+"""Prefix-cached shared-page KV memory system: content-hash matching,
+ref-counted sharing, copy-on-write, LRU eviction, recompute-preemption,
+and the seeded sampling layer that rides the same engines."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.models import api
+from repro.serve.engine import Engine, PagedEngine, Request
+from repro.serve.kv_cache import PagedKVCache
+from repro.serve.sampling import Sampler
+
+
+@pytest.fixture(scope="module")
+def small_cfg():
+    return get_config("qwen2_0_5b").smoke()
+
+
+@pytest.fixture(scope="module")
+def exact_lm():
+    cfg = get_config("qwen2_0_5b").smoke()
+    params, _ = api.init_params(jax.random.PRNGKey(0), cfg)
+    cfg = dataclasses.replace(cfg, softmax_mode="exact", norm_mode="exact",
+                              logit_int8=False)
+    return cfg, params
+
+
+def _paged(cfg, params, **kw):
+    base = dict(num_blocks=40, block_size=8, max_seq_len=64, max_running=4,
+                decode_batch=4, prefill_chunk=8, backend="pallas")
+    base.update(kw)
+    return PagedEngine(cfg, params, **base)
+
+
+# -- cache-level unit tests ----------------------------------------------------
+
+
+def test_lookup_attach_refcount_roundtrip(small_cfg):
+    cache = PagedKVCache(small_cfg, num_blocks=12, block_size=4,
+                         max_seq_len=32)
+    prompt = np.arange(10, dtype=np.int32)
+    assert cache.lookup_prefix(prompt) == ([], 0)   # cold index
+
+    cache.attach(0, [])
+    assert cache.append_tokens(0, 0, 10) == []      # 3 pages on demand
+    cache.register_prompt(0, prompt)
+    cache.release(0)
+    # registered pages stay resident, refcount 0, reclaimable
+    assert cache.blocks_in_use == 0 and cache.cached_blocks == 3
+
+    pages, matched = cache.lookup_prefix(prompt)
+    # full match capped at plen-1 = 9; final partial page (tokens 8..9)
+    # still attached for its earlier slot
+    assert matched == 9 and len(pages) == 3
+    cache.attach(1, pages, query_tokens=10, hit_tokens=matched)
+    assert cache.cached_blocks == 0 and cache.blocks_in_use == 3
+    assert cache.prefix_hit_rate() == pytest.approx(0.9)
+    cache.release(1)
+    assert cache.cached_blocks == 3
+    cache.check_refcounts()
+
+
+def test_partial_block_hash_is_length_exact(small_cfg):
+    """A partial final block only matches a prompt with exactly those
+    tokens; a longer prompt sharing the bytes does not hit it."""
+    cache = PagedKVCache(small_cfg, num_blocks=12, block_size=4,
+                         max_seq_len=32)
+    prompt = np.arange(6, dtype=np.int32)        # block 0 full, block 1: 4,5
+    cache.attach(0, [])
+    cache.append_tokens(0, 0, 6)
+    cache.register_prompt(0, prompt)
+    cache.release(0)
+    longer = np.arange(8, dtype=np.int32)        # block 1 would be 4,5,6,7
+    pages, matched = cache.lookup_prefix(longer)
+    assert matched == 4 and len(pages) == 1      # only the full block hits
+    same = np.arange(6, dtype=np.int32)
+    pages, matched = cache.lookup_prefix(same)
+    assert matched == 5 and len(pages) == 2
+    cache.check_refcounts()
+
+
+def test_cow_on_shared_page_write(small_cfg):
+    """Two sequences share a page; the writer gets a private copy and
+    the (src, dst) pair surfaces for the device replay."""
+    cache = PagedKVCache(small_cfg, num_blocks=12, block_size=4,
+                         max_seq_len=32)
+    prompt = np.arange(10, dtype=np.int32)
+    cache.attach(0, [])
+    cache.append_tokens(0, 0, 10)
+    cache.register_prompt(0, prompt)
+    pages, matched = cache.lookup_prefix(prompt)      # seq 0 still live
+    cache.attach(1, pages)                            # shared, refcount 2
+    shared = cache._tables[1][2]
+    copies = cache.append_tokens(1, matched, 10)      # recompute token 9
+    assert len(copies) == 1 and copies[0][0] == shared
+    assert cache._tables[1][2] == copies[0][1] != shared
+    assert cache._tables[0][2] == shared              # owner untouched
+    assert cache.cow_copies == 1
+    # seq 0's decode write into its refcount-1 page needs no copy
+    assert cache.append_tokens(0, 10, 11) == []
+    cache.release(0)
+    cache.release(1)
+    cache.check_refcounts()
+
+
+def test_lru_eviction_under_pressure(small_cfg):
+    """Acquiring past the free list evicts the least-recently-released
+    cached page and unregisters it from the index. Chains are enqueued
+    tail-first, so the suffix of the LRU chain goes before its prefix
+    (evicting block 0 first would orphan the deeper pages)."""
+    cache = PagedKVCache(small_cfg, num_blocks=7, block_size=4,
+                         max_seq_len=32)
+    pa = np.arange(8, dtype=np.int32)
+    pb = np.arange(100, 108, dtype=np.int32)
+    for sid, prompt in ((0, pa), (1, pb)):
+        cache.attach(sid, [])
+        cache.append_tokens(sid, 0, 8)
+        cache.register_prompt(sid, prompt)
+        cache.release(sid)
+    assert cache.cached_blocks == 4 and cache.free_blocks == 2
+    cache.attach(2, [])
+    cache.append_tokens(2, 0, 12)            # needs 3: 2 free + 1 evicted
+    assert cache.evictions == 1
+    # pa was released first -> its *last* page was the LRU victim; its
+    # block-0 page still serves a 4-token match
+    pages, matched = cache.lookup_prefix(pa)
+    assert matched == 4 and len(pages) == 1
+    assert cache.lookup_prefix(pb)[1] == 7
+    cache.release(2)
+    cache.check_refcounts()
+
+
+def test_lookup_verifies_content_not_just_hash(small_cfg):
+    """A hash hit whose registered entry does not byte-match the prompt
+    is a miss — a 64-bit collision can never attach foreign KV."""
+    cache = PagedKVCache(small_cfg, num_blocks=12, block_size=4,
+                         max_seq_len=32)
+    pa = np.arange(8, dtype=np.int32)
+    pb = np.arange(100, 108, dtype=np.int32)
+    for sid, prompt in ((0, pa), (1, pb)):
+        cache.attach(sid, [])
+        cache.append_tokens(sid, 0, 8)
+        cache.register_prompt(sid, prompt)
+        cache.release(sid)
+    # simulate a chain-hash collision: pa's level-0 hash now points at
+    # pb's level-0 page, whose stored bytes are pb's
+    (h0, _), _ = cache.prefix_keys(pa)
+    cache._index[h0] = cache.lookup_prefix(pb)[0][0]
+    assert cache.lookup_prefix(pa) == ([], 0)
+    # pb's own chain still verifies end to end
+    assert cache.lookup_prefix(pb)[1] == 7
+
+
+def test_refcount_never_negative_and_double_release_guarded(small_cfg):
+    cache = PagedKVCache(small_cfg, num_blocks=7, block_size=4,
+                         max_seq_len=32)
+    cache.attach(0, [])
+    cache.append_tokens(0, 0, 8)
+    cache.release(0)
+    with pytest.raises(KeyError):
+        cache.release(0)                     # table already gone
+    cache.check_refcounts()
+
+
+# -- engine-level behavior -----------------------------------------------------
+
+
+def test_cow_fork_token_parity(exact_lm):
+    """Two live sequences share a prompt prefix then diverge: the fork
+    COWs the boundary page and both outputs match a cold-cache engine
+    token for token."""
+    cfg, params = exact_lm
+    rng = np.random.default_rng(11)
+    shared = rng.integers(0, cfg.vocab_size, size=20).astype(np.int32)
+    reqs = [Request(prompt=shared, max_new_tokens=6),
+            Request(prompt=shared, max_new_tokens=6),
+            Request(prompt=np.concatenate([shared[:16],
+                                           rng.integers(0, cfg.vocab_size,
+                                                        size=6)
+                                           .astype(np.int32)]),
+                    max_new_tokens=6)]
+    warm_eng = _paged(cfg, params)
+    warm_eng.generate(reqs)                  # populate the index
+    warm = warm_eng.generate(reqs)           # all prompts hit
+    cold = _paged(cfg, params, prefix_cache=False).generate(reqs)
+    assert warm == cold
+    st = warm_eng.stats()
+    assert st["prefix_hit_rate"] > 0
+    assert st["cow_copies"] > 0              # identical prompts forked
+    warm_eng.cache.check_refcounts()
+
+
+def test_same_wave_identical_prompts_share(exact_lm):
+    """The second identical request of one wave hits the pages the
+    first registered at prefill completion."""
+    cfg, params = exact_lm
+    rng = np.random.default_rng(12)
+    prompt = rng.integers(0, cfg.vocab_size, size=24).astype(np.int32)
+    reqs = [Request(prompt=prompt, max_new_tokens=5) for _ in range(3)]
+    eng = _paged(cfg, params, max_running=1)  # strictly sequential wave
+    outs = eng.generate(reqs)
+    assert outs[0] == outs[1] == outs[2]
+    assert eng.stats()["prefix_hit_tokens"] > 0
+    eng.cache.check_refcounts()
+
+
+def test_eviction_under_pool_pressure_engine(exact_lm):
+    """A pool far smaller than the trace keeps evicting cached pages;
+    outputs still match the uncached engine."""
+    cfg, params = exact_lm
+    rng = np.random.default_rng(13)
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab_size, size=16)
+                    .astype(np.int32), max_new_tokens=4)
+            for _ in range(8)]
+    tight = _paged(cfg, params, num_blocks=9, max_running=2, decode_batch=2)
+    outs = tight.generate(reqs)
+    cold = _paged(cfg, params, prefix_cache=False).generate(reqs)
+    assert outs == cold
+    assert tight.stats()["evictions"] > 0
+    tight.cache.check_refcounts()
+
+
+def test_preempt_resume_token_parity(exact_lm):
+    """Recompute-preemption (watermark 0, tight pool) replays
+    prompt + generated tokens and lands on identical greedy outputs."""
+    cfg, params = exact_lm
+    rng = np.random.default_rng(3)
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab_size, size=16)
+                    .astype(np.int32), max_new_tokens=8)
+            for _ in range(5)]
+    roomy = _paged(cfg, params).generate(reqs)
+    tight_eng = _paged(cfg, params, num_blocks=8, watermark=0)
+    tight = tight_eng.generate(reqs)
+    assert tight == roomy
+    assert tight_eng.stats()["preemptions"] > 0
+    tight_eng.cache.check_refcounts()
+
+
+def test_warm_cold_preempt_outputs_identical(exact_lm):
+    """Acceptance: warm-cache, cold-cache, and preemption-forced runs
+    produce identical greedy outputs for the same requests."""
+    cfg, params = exact_lm
+    rng = np.random.default_rng(21)
+    shared = rng.integers(0, cfg.vocab_size, size=16).astype(np.int32)
+    reqs = [Request(prompt=np.concatenate(
+                [shared, rng.integers(0, cfg.vocab_size, size=4)
+                 .astype(np.int32)]), max_new_tokens=6)
+            for _ in range(4)]
+    cold = _paged(cfg, params, prefix_cache=False).generate(reqs)
+    warm_eng = _paged(cfg, params)
+    warm_eng.generate(reqs)
+    warm = warm_eng.generate(reqs)
+    preempt_eng = _paged(cfg, params, num_blocks=6, watermark=0)
+    preempted = preempt_eng.generate(reqs)
+    assert warm == cold == preempted
+    assert warm_eng.stats()["prefix_hit_rate"] > 0
+    assert preempt_eng.stats()["preemptions"] > 0
+
+
+# -- sampling ------------------------------------------------------------------
+
+
+def test_sampler_greedy_and_seeded():
+    logits = np.array([0.1, 2.0, -1.0, 1.9])
+    assert Sampler()(logits) == 1                      # temperature 0
+    a = [Sampler(temperature=1.0, seed=5)(logits) for _ in range(8)]
+    b = [Sampler(temperature=1.0, seed=5)(logits) for _ in range(8)]
+    assert a == b                                      # seed-deterministic
+    s = Sampler(temperature=1.0, seed=5)
+    stream = [s(logits) for _ in range(8)]
+    assert set(stream) <= {0, 1, 2, 3}
+    top1 = Sampler(temperature=1.0, top_k=1, seed=7)
+    assert [top1(logits) for _ in range(4)] == [1] * 4  # top-1 == greedy
+    masked = Sampler(temperature=1.0, seed=3, vocab_size=2)
+    assert all(masked(logits) < 2 for _ in range(8))    # padded tail cut
+
+
+def test_sampled_generation_deterministic_and_replayable(exact_lm):
+    """Stochastic sampling: same seeds give identical outputs across
+    engines runs, and warm-cache replay stays aligned (samplers are
+    per-sequence streams, never re-drawn during recompute)."""
+    cfg, params = exact_lm
+    rng = np.random.default_rng(9)
+    prompt = rng.integers(0, cfg.vocab_size, size=16).astype(np.int32)
+    reqs = [Request(prompt=prompt, max_new_tokens=6, temperature=0.8,
+                    top_k=8, seed=100 + i) for i in range(3)]
+    eng = _paged(cfg, params)
+    cold = eng.generate(reqs)
+    warm = eng.generate(reqs)
+    again = _paged(cfg, params).generate(reqs)
+    assert cold == warm == again
+    assert all(0 <= t < cfg.vocab_size for o in cold for t in o)
+    # distinct seeds actually diversify the streams
+    assert len({tuple(o) for o in cold}) > 1
+
+
+def test_dense_engine_sampling(exact_lm):
+    """The dense-slot baseline honors the same sampling params."""
+    cfg, params = exact_lm
+    rng = np.random.default_rng(10)
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab_size, size=8)
+                    .astype(np.int32), max_new_tokens=5, temperature=1.2,
+                    seed=i) for i in range(4)]
+    eng = Engine(cfg, params, batch_size=4, max_len=16)
+    a = eng.generate(reqs)
+    b = Engine(cfg, params, batch_size=4, max_len=16).generate(reqs)
+    assert a == b
+    assert all(len(o) == 5 for o in a)
+    assert all(0 <= t < cfg.vocab_size for o in a for t in o)

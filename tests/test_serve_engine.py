@@ -133,12 +133,14 @@ def test_chunked_prefill_matches_oneshot(exact_lm):
 
 
 def test_page_reclamation_and_reuse(small_lm):
-    """Finished sequences return every page; the engine serves a second
-    wave from a clean pool (continuous batching across generate calls)."""
+    """With the prefix cache off, finished sequences return every page;
+    the engine serves a second wave from a clean pool (continuous
+    batching across generate calls)."""
     cfg, params = small_lm
     eng = PagedEngine(cfg, params, num_blocks=16, block_size=8,
                       max_seq_len=64, max_running=4, decode_batch=4,
-                      prefill_chunk=8, backend="pallas")
+                      prefill_chunk=8, backend="pallas",
+                      prefix_cache=False)
     reqs = _requests(cfg, 4, np.random.default_rng(1), plen=8, new=4)
     a = eng.generate(reqs)
     assert eng.cache.blocks_in_use == 0
@@ -147,6 +149,29 @@ def test_page_reclamation_and_reuse(small_lm):
     b = eng.generate(reqs)
     assert a == b  # clean pool => identical replay
     assert eng.cache.blocks_in_use == 0
+    eng.cache.check_refcounts()
+
+
+def test_prefix_cache_residency(exact_lm):
+    """With the prefix cache on, a finished wave's prompt pages stay
+    resident (evictable, refcount 0) instead of returning to the free
+    list, and the replayed wave reports prefix hits. Exact mode: warm
+    replay is token-identical (SOLE's per-chunk calibration makes warm
+    tail chunks legitimately drift; covered by the agreement test)."""
+    cfg, params = exact_lm
+    eng = PagedEngine(cfg, params, num_blocks=16, block_size=8,
+                      max_seq_len=64, max_running=4, decode_batch=4,
+                      prefill_chunk=8, backend="pallas")
+    reqs = _requests(cfg, 4, np.random.default_rng(1), plen=8, new=4)
+    a = eng.generate(reqs)
+    assert eng.cache.blocks_in_use == 0
+    assert eng.cache.cached_blocks > 0
+    b = eng.generate(reqs)
+    assert a == b
+    st = eng.stats()
+    assert st["prefix_hit_rate"] > 0
+    assert st["prefix_hit_tokens"] > 0
+    eng.cache.check_refcounts()
 
 
 def test_oversubscribed_trace_queues_and_completes(small_lm):
@@ -183,7 +208,8 @@ def test_request_that_can_never_fit_raises(small_lm):
                       max_seq_len=128, prefill_chunk=8)
     ok = Request(prompt=np.zeros(4, np.int32), max_new_tokens=2)
     big = Request(prompt=np.zeros(100, np.int32), max_new_tokens=8)
-    with pytest.raises(ValueError, match="never fit"):
+    # single validation pass, naming the offending request's index
+    with pytest.raises(ValueError, match=r"request 1: .*never fit"):
         eng.generate([ok, big])
     # pre-submit validation: the ok request must not be stranded queued
     assert not eng.sched.waiting and not eng.sched.running
@@ -208,13 +234,17 @@ def test_paged_cache_accounting(small_lm):
     cfg, _ = small_lm
     cache = PagedKVCache(cfg, num_blocks=8, block_size=4, max_seq_len=16)
     assert cache.free_blocks == 7          # page 0 reserved
-    assert cache.allocate(0, 9)            # 3 pages
+    cache.attach(0, [])
+    assert cache.append_tokens(0, 0, 9) == []   # 3 pages, no COW
     assert cache.blocks_in_use == 3
-    assert not cache.allocate(1, 100)      # exceeds max_blocks_per_seq
-    assert cache.allocate(1, 16)           # 4 pages
-    assert not cache.can_allocate(4)       # 0 free left
+    with pytest.raises(ValueError, match="max_blocks_per_seq"):
+        cache.attach(1, []) or cache.append_tokens(1, 0, 100)
+    assert cache.append_tokens(1, 0, 16) == []  # 4 pages
+    cache.attach(2, [])
+    assert cache.append_tokens(2, 0, 4) is None  # pool exhausted
     row = cache.table_row(0)
     assert row.shape == (4,) and (row[:3] > 0).all() and row[3] == 0
-    cache.free_seq(0)
+    cache.release(0)                       # unregistered pages -> free
     assert cache.free_blocks == 3
     assert cache.utilization() == pytest.approx(4 / 7)
+    cache.check_refcounts()
