@@ -1,0 +1,101 @@
+"""Bench-regression guard: fail CI when a freshly recorded
+BENCH_serve.json loses too much paged tok/s against the committed
+baseline.
+
+CI copies the committed ``benchmarks/BENCH_serve.json`` aside, reruns
+``serve_throughput.py --record``, then runs this script against the
+copy. Every paged-engine ``tok_s`` entry in the baseline (any dict
+whose ``engine`` label starts with ``paged``, found recursively) is
+matched by JSON path in the fresh report and must be at least
+``(1 - max_drop)`` of its baseline value. Wall-clock numbers on shared
+runners are noisy — the 20% default tolerance plus the bench's own
+one-retry policy absorbs jitter while still catching a step-function
+regression (e.g. the decode hot loop falling back to per-token
+dispatch). ``tokens_per_dispatch`` is guarded with the same floor but
+is *deterministic* (the trace clock is engine steps, not wall time),
+so a drop there is a real scheduling/horizon regression regardless of
+runner speed. Missing paths fail loudly: a renamed entry must update
+the committed baseline in the same PR.
+
+Run:  python benchmarks/check_bench_regression.py \
+          --baseline /tmp/bench_baseline.json \
+          --fresh benchmarks/BENCH_serve.json [--max-drop 0.2]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+GUARDED_METRICS = ("tok_s", "tokens_per_dispatch")
+
+
+def paged_metrics(node, path=""):
+    """Yield (json_path, metric, value) for every paged-engine result."""
+    if isinstance(node, dict):
+        eng = node.get("engine")
+        if isinstance(eng, str) and eng.startswith("paged"):
+            for metric in GUARDED_METRICS:
+                if metric in node:
+                    yield path, metric, float(node[metric])
+        for k, v in node.items():
+            yield from paged_metrics(v, f"{path}/{k}")
+
+
+def lookup(node, path: str):
+    for key in path.strip("/").split("/"):
+        if not isinstance(node, dict) or key not in node:
+            return None
+        node = node[key]
+    return node
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True,
+                    help="committed BENCH_serve.json (pre-refresh copy)")
+    ap.add_argument("--fresh", required=True,
+                    help="freshly recorded BENCH_serve.json")
+    ap.add_argument("--max-drop", type=float, default=0.2,
+                    help="max fractional tok/s drop before failing")
+    args = ap.parse_args()
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+
+    entries = list(paged_metrics(baseline))
+    if not entries:
+        print("bench-regression: no paged entries in baseline — "
+              "nothing to guard (first recording?)")
+        return 0
+
+    failures = []
+    for path, metric, base in entries:
+        node = lookup(fresh, path)
+        now = node.get(metric) if isinstance(node, dict) else None
+        if now is None:
+            failures.append(f"{path}.{metric}: present in baseline "
+                            f"({base}) but missing from fresh report")
+            continue
+        floor = base * (1.0 - args.max_drop)
+        verdict = "FAIL" if now < floor else "ok"
+        print(f"{verdict}  {path}.{metric}: {base} -> {now} "
+              f"(floor {floor:.2f})")
+        if now < floor:
+            failures.append(f"{path}.{metric}: {base} -> {now} "
+                            f"(> {args.max_drop:.0%} drop)")
+    if failures:
+        print("bench-regression guard FAILED:", file=sys.stderr)
+        for msg in failures:
+            print("  " + msg, file=sys.stderr)
+        return 1
+    print(f"bench-regression guard passed ({len(entries)} guarded "
+          f"paged metrics)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

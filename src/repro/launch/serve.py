@@ -40,6 +40,10 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--engine", choices=("dense", "paged"), default="dense",
                     help="dense-slot baseline or paged continuous batching")
+    ap.add_argument("--decode-horizon", type=int, default=8,
+                    help="max fused decode+sample steps per jitted "
+                         "dispatch (paged engine; 1 = one host round "
+                         "trip per token, sampling still in-jit)")
     ap.add_argument("--prefix-cache", action=argparse.BooleanOptionalAction,
                     default=True,
                     help="share identical block-aligned prompt prefixes "
@@ -90,7 +94,8 @@ def main() -> None:
             args.requests * ((max_len + 15) // 16 + 1), 16)
         eng = PagedEngine(cfg, params, num_blocks=blocks, block_size=16,
                           max_seq_len=max_len, max_running=args.batch,
-                          decode_batch=args.batch, rules=rules,
+                          decode_batch=args.batch,
+                          decode_horizon=args.decode_horizon, rules=rules,
                           prefix_cache=args.prefix_cache,
                           watermark=args.watermark)
     else:

@@ -272,3 +272,47 @@ def decode_step_paged(params, pools, token: Array, pos: Array,
         tables, pools, cfg, causal=False, backend=backend,
         ffn_apply=ffn_apply)
     return logits[:, 0], pools
+
+
+def decode_horizon_paged(params, pools, token: Array, pos: Array,
+                         tables: Array, temperature: Array, top_k: Array,
+                         seed: Array, counter: Array, cfg: ArchConfig, *,
+                         num_steps: int, use_top_k: bool = True,
+                         stochastic: bool = True,
+                         backend: Optional[str] = None, ffn_apply=None):
+    """``num_steps`` fused decode+sample steps in one ``lax.scan``.
+
+    token/pos (B,) are the feed token and its absolute position for step
+    0; temperature/top_k/seed/counter (B,) are the per-lane sampling
+    stream parameters (see serve/sampling.py — step ``i`` draws with
+    counter ``counter + i``; ``use_top_k``/``stochastic`` are the
+    static fast-path switches, safe whenever no lane in the batch uses
+    top-k / a temperature). The page tables must already cover
+    positions ``pos .. pos + num_steps - 1`` (the scheduler pre-extends
+    them, COW copies applied up front), so the whole horizon runs on
+    device with no host round trip: each scan step runs
+    :func:`decode_step_paged` — the single decode-forward
+    implementation — then samples the next token in-jit and feeds it
+    forward. Only the (B, num_steps) sampled ids come back to the host
+    — per-token logits transfers are gone.
+
+    Null lanes (all-zero table rows) are self-absorbing: their writes
+    land in the null page and their sampled garbage feeds only
+    themselves (see the null-page invariant in serve/kv_cache.py).
+    Returns (tokens (B, num_steps) int32, pools).
+    """
+    from repro.serve.sampling import sample_tokens
+
+    def step(carry, i):
+        pools, tok, p = carry
+        logits, pools = decode_step_paged(params, pools, tok, p, tables,
+                                          cfg, backend=backend,
+                                          ffn_apply=ffn_apply)
+        nxt = sample_tokens(logits, temperature, top_k, seed,
+                            counter + i, cfg.vocab_size,
+                            use_top_k=use_top_k, stochastic=stochastic)
+        return (pools, nxt, p + 1), nxt
+
+    (pools, _, _), toks = jax.lax.scan(
+        step, (pools, token, pos), jnp.arange(num_steps, dtype=jnp.int32))
+    return jnp.transpose(toks), pools

@@ -66,8 +66,18 @@ class PagedEngine:
 
       * ``_prefill``: one chunk of one sequence's replay (B=1, C static;
         padded tail writes route to the null page via ``n_valid``);
-      * ``_decode``: one token for up to ``decode_batch`` sequences (lane
-        count static; short batches are padded with null-page lanes);
+      * ``_decode_h``: a **decode horizon** — H fused decode+sample
+        steps for up to ``decode_batch`` sequences in one jitted
+        ``lax.scan`` (lane count static; short batches are padded with
+        null-page lanes). Sampling runs in-jit on the counter-keyed
+        threefry stream (serve/sampling.py), so only the (B, H) sampled
+        ids ever reach the host — the per-token (B, padded_vocab)
+        logits transfer and per-token dispatch are gone. The scheduler
+        bounds H by the next scheduling event (finish / pending
+        prefill), the cache pre-extends each lane's page table for all
+        H tokens (COW copies applied up front), and H is floored to a
+        power of two so at most ``log2(decode_horizon)+1`` scan shapes
+        ever compile;
       * ``_copy``: one page duplicated across layers/pools (COW).
 
     Attention implementations resolve through the ``repro.ops``
@@ -82,7 +92,8 @@ class PagedEngine:
     def __init__(self, cfg: ArchConfig, params, *, num_blocks: int = 64,
                  block_size: int = 16, max_seq_len: int = 256,
                  max_running: int = 8, decode_batch: int = 4,
-                 prefill_chunk: int = 16, backend: Optional[str] = None,
+                 prefill_chunk: int = 16, decode_horizon: int = 8,
+                 backend: Optional[str] = None,
                  prefix_cache: bool = True, watermark: int = 1,
                  rules: Optional[R.Rules] = None):
         if cfg.family != "dense":
@@ -94,9 +105,13 @@ class PagedEngine:
         if backend is None:
             backend = ops.backend_for(cfg, "paged_attention",
                                       cfg.softmax_mode)
+        if decode_horizon < 1:
+            raise ValueError(
+                f"decode_horizon must be >= 1, got {decode_horizon}")
         self.cfg = cfg
         self.params = params
         self.decode_batch = decode_batch
+        self.decode_horizon = decode_horizon
         self.backend = backend
         self.rules = rules
         self.model = api.get_model(cfg)
@@ -111,6 +126,7 @@ class PagedEngine:
                                watermark=watermark)
         self.steps = 0
         self.decode_tokens = 0
+        self.decode_dispatches = 0
         self._finished: Dict[int, List[int]] = {}
 
         def _prefill(params, pools, tokens, q_start, n_valid, tables):
@@ -118,13 +134,18 @@ class PagedEngine:
                                             n_valid, tables, pools, cfg,
                                             backend=backend)
 
-        def _decode(params, pools, token, pos, tables):
-            return self.model.decode_step_paged(params, pools, token, pos,
-                                                tables, cfg,
-                                                backend=backend)
+        def _decode_h(params, pools, token, pos, tables, temperature,
+                      top_k, seed, counter, num_steps, use_top_k,
+                      stochastic):
+            return self.model.decode_horizon_paged(
+                params, pools, token, pos, tables, temperature, top_k,
+                seed, counter, cfg, num_steps=num_steps,
+                use_top_k=use_top_k, stochastic=stochastic,
+                backend=backend)
 
         self._prefill = jax.jit(_prefill, donate_argnums=(1,))
-        self._decode = jax.jit(_decode, donate_argnums=(1,))
+        self._decode_h = jax.jit(_decode_h, donate_argnums=(1,),
+                                 static_argnums=(9, 10, 11))
         self._copy = jax.jit(copy_pages, donate_argnums=(0,))
 
     def _apply_copies(self, copies: List[Tuple[int, int]]) -> None:
@@ -172,41 +193,71 @@ class PagedEngine:
                 seq.out.append(seq.sampler(np.asarray(logits[0, real - 1])))
 
     def _decode_step(self) -> None:
+        batch = self.sched.decode_batch(self.decode_batch)
+        # horizon: largest event-safe token count, floored to a power of
+        # two so the scan compiles at most log2(decode_horizon)+1 shapes.
+        h = self.sched.decode_horizon(batch, self.decode_horizon)
+        if h == 0:
+            return
+        h = 1 << (h.bit_length() - 1)
         lanes: List[Sequence] = []
-        for seq in self.sched.decode_batch(self.decode_batch):
+        for seq in batch:
             if seq not in self.sched.running:
                 continue                 # preempted by an earlier lane
             pos = seq.prompt_len + len(seq.out) - 1
-            copies = self.sched.ensure_tokens(seq, pos, pos + 1)
+            # pre-extend the page table for the whole horizon: every
+            # page the in-jit scan will write exists, and is private
+            # (COW copies surfaced here), before dispatch.
+            copies = self.sched.ensure_tokens(seq, pos, pos + h)
             if copies is None:
                 continue
             self._apply_copies(copies)
             lanes.append(seq)
-        # ensure_tokens for a later lane may have preempted an earlier
-        # one whose pages are gone — drop it before any device write.
-        lanes = [s for s in lanes if s in self.sched.running]
+        # victim policy invariant: ensure_tokens preempts youngest-first
+        # and stops at the requesting seq, so a later lane's growth can
+        # only evict lanes *after* it in running order — never one
+        # already collected above. Device writes rely on this.
+        assert all(s in self.sched.running for s in lanes)
         if not lanes:
             return
         d = self.decode_batch
         token = np.zeros((d,), np.int32)
         pos = np.zeros((d,), np.int32)
+        temp = np.zeros((d,), np.float32)     # null lanes decode greedily
+        topk = np.zeros((d,), np.int32)
+        seed = np.zeros((d,), np.uint32)
+        ctr = np.zeros((d,), np.int32)
         sids: List[Optional[int]] = [None] * d
         for i, seq in enumerate(lanes):
             token[i] = seq.out[-1]
             pos[i] = seq.prompt_len + len(seq.out) - 1
+            s = seq.sampler
+            temp[i], topk[i], seed[i] = s.temperature, s.top_k, s.seed
+            # token n draws with counter n: the host sampler spent
+            # counter 0 on the prefill-logits token, so the device
+            # stream continues exactly where it left off.
+            ctr[i] = len(seq.out)
             sids[i] = seq.seq_id
         tables = jnp.asarray(self.cache.batch_tables(sids))
-        logits, pools = self._decode(self.params, self.cache.pools,
-                                     jnp.asarray(token), jnp.asarray(pos),
-                                     tables)
+        # static sampling fast paths: skipping the top-k rank sorts /
+        # Gumbel rows is an exact identity for lanes that don't use
+        # them, so flags from the live batch never change any draw.
+        use_top_k = any(s.sampler.top_k > 0 for s in lanes)
+        stochastic = any(s.sampler.temperature > 0 for s in lanes)
+        toks, pools = self._decode_h(
+            self.params, self.cache.pools, jnp.asarray(token),
+            jnp.asarray(pos), tables, jnp.asarray(temp), jnp.asarray(topk),
+            jnp.asarray(seed), jnp.asarray(ctr), h, use_top_k, stochastic)
         self.cache.pools = pools
-        rows = np.asarray(logits)
+        rows = np.asarray(toks)
         for i, seq in enumerate(lanes):
-            seq.out.append(seq.sampler(rows[i]))
-            # the decode step wrote the fed token's KV at pos[i]:
+            seq.out.extend(int(t) for t in rows[i])
+            seq.sampler.skip(h)          # host stream stays aligned
+            # the horizon wrote the fed tokens' KV at pos[i]..pos[i]+h-1:
             # prefilled tracks written KV so replay stays in sync.
-            seq.prefilled = int(pos[i]) + 1
-            self.decode_tokens += 1
+            seq.prefilled = int(pos[i]) + h
+            self.decode_tokens += h
+        self.decode_dispatches += 1
 
     def _reap_done(self) -> None:
         for seq in list(self.sched.running):
@@ -216,9 +267,10 @@ class PagedEngine:
 
     def step(self) -> None:
         """One engine iteration: admit, one prefill chunk, one decode
-        token for the running batch, reclaim finished sequences.
-        Finished sequences are reaped right after prefill too, so their
-        pages fund the decode batch's on-demand growth."""
+        horizon (up to ``decode_horizon`` fused tokens per lane) for
+        the running batch, reclaim finished sequences. Finished
+        sequences are reaped right after prefill too, so their pages
+        fund the decode batch's on-demand growth."""
         self.sched.admit()
         seq = self.sched.next_prefill()
         if seq is not None:
@@ -273,6 +325,9 @@ class PagedEngine:
             "finished": s.finished,
             "steps": self.steps,
             "decode_tokens": self.decode_tokens,
+            "decode_dispatches": self.decode_dispatches,
+            "tokens_per_dispatch": round(
+                self.decode_tokens / max(self.decode_dispatches, 1), 3),
         }
 
     def reset_stats(self) -> None:
@@ -283,6 +338,7 @@ class PagedEngine:
         self.sched.finished = 0
         self.steps = 0
         self.decode_tokens = 0
+        self.decode_dispatches = 0
 
 
 class Engine:
@@ -317,6 +373,15 @@ class Engine:
         return outs
 
     def _generate_batch(self, chunk: List[Request]) -> List[List[int]]:
+        """One padded batch. The final ragged chunk of a trace is padded
+        up to ``batch_size`` with masked lanes (zero prompt, zero token
+        budget) so the batch dimension — and with it the compiled
+        prefill/decode shapes — never varies across chunks: one compile
+        per prompt length serves the whole trace instead of one per
+        ragged tail (the PR 3 bench-warmup artifact's root cause)."""
+        real = len(chunk)
+        pad = Request(prompt=np.zeros(1, np.int32), max_new_tokens=0)
+        chunk = chunk + [pad] * (self.batch - real)
         b = len(chunk)
         samplers = [sampler_for(r, self.cfg.vocab_size) for r in chunk]
         plen = max(len(r.prompt) for r in chunk)
@@ -325,8 +390,10 @@ class Engine:
             toks[j, plen - len(r.prompt):] = r.prompt  # left-pad
         logits, cache = self._prefill(self.params, jnp.asarray(toks))
         rows = np.asarray(logits[:, -1])
-        results = [[samplers[j](rows[j])] for j in range(b)]
-        token = jnp.asarray(np.array([r[-1] for r in results], np.int32))
+        results = [[samplers[j](rows[j])] if j < real else []
+                   for j in range(b)]
+        token = jnp.asarray(np.array([r[-1] if r else 0 for r in results],
+                                     np.int32))
         max_new = max(r.max_new_tokens for r in chunk)
         pos = plen
         for _ in range(max_new - 1):
@@ -339,9 +406,10 @@ class Engine:
                     results[j].append(samplers[j](rows[j]))
                     nxt[j] = results[j][-1]
                 else:
-                    # finished lane: keep feeding greedy continuations
-                    # so its KV stream stays deterministic for others.
+                    # finished or padding lane: keep feeding greedy
+                    # continuations so its KV stream stays deterministic
+                    # for others.
                     nxt[j] = int(np.argmax(rows[j]))
             token = jnp.asarray(nxt)
             pos += 1
-        return results
+        return results[:real]

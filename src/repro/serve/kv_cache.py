@@ -6,6 +6,20 @@ of a dense ``max_len`` cache region. Page 0 is reserved as the **null
 page**: page-table padding and masked-lane writes route there, so every
 gather/scatter stays in bounds without host-side branching.
 
+**Null-page invariant: page 0 is write-absorbing and is never read as
+signal.** Writes that must go *somewhere* but mean nothing — the padded
+tail of a final prefill chunk (``n_valid`` masking), idle decode lanes
+(``sids=None`` rows feed ``token=0, pos=0`` through an all-null table),
+null->null COW padding pairs — all scatter into page 0, so its contents
+are arbitrary garbage at all times. That is safe because no read path
+treats it as data: attention masks strictly by ``kv_len``, which for a
+live sequence counts only tokens written through its *own* table
+entries, and a null lane's output feeds only itself. Nothing may ever
+zero-check or otherwise interpret page 0; correctness must be invariant
+to arbitrary (finite) garbage pre-loaded into it — the regression test
+``test_serve_engine.py::test_null_page_garbage_invariance`` pins
+exactly that, for prefill and decode, on both attention backends.
+
 On top of the PR-1 paging this adds the three mechanisms that let pages
 be *shared* between sequences:
 
@@ -295,9 +309,13 @@ class PagedKVCache:
 
         Grows the table on demand to cover ``end`` tokens and
         copy-on-writes any shared page (refcount > 1) the write range
-        touches. Returns the (src, dst) page copies the engine must
-        replay on device before writing, or None (no state change) if
-        the pool cannot cover the growth — the preemption signal.
+        touches. The range is arbitrary — one decode token, a prefill
+        chunk, or a full decode horizon: the engine pre-extends a lane's
+        table for all H tokens of a fused multi-token step in one call,
+        so every page the in-jit scan will write exists (and is private)
+        before dispatch. Returns the (src, dst) page copies the engine
+        must replay on device before writing, or None (no state change)
+        if the pool cannot cover the growth — the preemption signal.
         """
         table = self._tables[seq_id]
         bs = self.block_size

@@ -1,25 +1,103 @@
-"""Per-sequence token sampling for the serve engines.
+"""Per-sequence token sampling for the serve engines — one algorithm,
+two homes.
 
-Each request carries ``(temperature, top_k, seed)`` and gets its own
-:class:`Sampler` — a seeded categorical sampler over the final-position
-logits, greedy argmax when ``temperature == 0``. The sampler owns a
-private ``numpy`` Generator, so its draw stream depends only on the seed
-and on how many tokens *this* sequence has sampled — never on batch
-composition, chunk boundaries, or scheduling. That is what makes
-warm-cache, cold-cache and preemption-forced runs replayable: preemption
-recompute replays stored tokens without consuming draws, so the stream
-stays aligned.
+Every request carries ``(temperature, top_k, seed)``. A draw is defined
+by a **counter-keyed threefry stream**: token ``n`` of a sequence is
+sampled with ``key = fold_in(PRNGKey(seed), n)`` where ``n`` is the
+number of tokens the sequence has sampled so far. Because the key
+depends only on ``(seed, n)`` — never on batch composition, chunk
+boundaries, decode-horizon length, or scheduling — warm-cache,
+cold-cache and preemption-forced runs replay token-identically:
+recompute feeds stored tokens back without consuming draws, so the
+stream stays aligned, and a horizon of H fused decode steps draws
+counters ``n .. n+H-1`` exactly as H single steps would.
 
-Sampling runs host-side on the (small) logits rows the engines already
-pull back per step; the padded-vocab tail is masked before normalizing.
+The draw itself is Gumbel-argmax over float32 logits with pinned
+semantics (identical op order on both implementations, so they agree
+bit-for-bit — ties included):
+
+1. slice the padded-vocab tail (``[:vocab_size]``);
+2. ``top_k`` masks on the **raw** logits: exactly the k highest entries
+   survive, ties at the k-th value broken toward *lower indices* (rank
+   in a stable descending sort), everything else ``-inf``;
+3. ``temperature == 0`` → argmax (first index on ties);
+4. otherwise divide by the temperature, add Gumbel noise from the
+   counter key, argmax.
+
+Two implementations share that contract:
+
+* :func:`sample_tokens` — batched, jittable, runs **inside** the
+  engine's fused decode-horizon scan so logits never leave the device
+  (only the ``(B, H)`` sampled ids do);
+* :class:`Sampler` — the host-side per-row oracle (numpy math, the
+  same threefry bits). The engines use it for the prefill-logits first
+  token and tests use it to pin the device path.
 """
 from __future__ import annotations
 
+import jax
+import jax.numpy as jnp
 import numpy as np
+
+Array = jax.Array
+
+# temperature==0 lanes take the argmax branch; the divide still executes
+# under jnp.where, so give it a harmless tiny denominator instead of 0.
+_MIN_TEMP = 1e-30
+
+
+def _gumbel_row(seed, counter, vocab_size: int, dtype=jnp.float32):
+    """Gumbel noise for draw ``counter`` of stream ``seed`` — the shared
+    random bits of the host and device samplers."""
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), counter)
+    return jax.random.gumbel(key, (vocab_size,), dtype)
+
+
+def sample_tokens(logits: Array, temperature: Array, top_k: Array,
+                  seed: Array, counter: Array, vocab_size: int, *,
+                  use_top_k: bool = True, stochastic: bool = True) -> Array:
+    """Batched in-jit sampler: (B, padded_vocab) logits -> (B,) ids.
+
+    temperature (B,) f32, top_k (B,) i32 (<=0 = full vocab), seed (B,)
+    u32, counter (B,) i32 draws-so-far. Jittable; vmapped threefry keys
+    mean lane ``i``'s draw is exactly ``Sampler``'s draw ``counter[i]``
+    for ``seed[i]`` regardless of which lanes share the batch.
+
+    ``use_top_k=False`` / ``stochastic=False`` are static fast-path
+    switches for batches where no lane uses top-k / a temperature:
+    they skip work that is an exact identity for such lanes (the rank
+    sorts over the vocab, the Gumbel rows), so the caller may set them
+    from the live batch without changing any lane's draw — the engine
+    does, keeping the all-greedy hot path free of per-token argsorts.
+    """
+    z = logits.astype(jnp.float32)[:, :vocab_size]
+    if use_top_k:
+        # exact top-k on raw logits: rank = position in the stable
+        # descending sort, so ties at the k-th value keep the lowest
+        # indices and exactly k candidates survive (per-lane traced k).
+        order = jnp.argsort(-z, axis=-1)        # stable by default
+        ranks = jnp.argsort(order, axis=-1)     # inverse permutation
+        keep = (top_k[:, None] <= 0) | (ranks < top_k[:, None])
+        zm = jnp.where(keep, z, -jnp.inf)
+    else:
+        zm = z
+    greedy = jnp.argmax(zm, axis=-1)
+    if not stochastic:
+        return greedy.astype(jnp.int32)
+    y = zm / jnp.maximum(temperature, jnp.float32(_MIN_TEMP))[:, None]
+    g = jax.vmap(lambda s, c: _gumbel_row(s, c, vocab_size))(seed, counter)
+    sampled = jnp.argmax(y + g, axis=-1)
+    out = jnp.where(temperature <= 0.0, greedy, sampled)
+    return out.astype(jnp.int32)
 
 
 class Sampler:
-    """Stateful per-sequence sampler: greedy or seeded categorical."""
+    """Host-side per-sequence oracle of the device sampling contract.
+
+    Stateful counter: call ``n`` uses threefry key ``(seed, n)`` — the
+    same key :func:`sample_tokens` uses for ``counter == n``, so host
+    and device draws agree bit-for-bit on equal logits rows.
+    """
 
     def __init__(self, temperature: float = 0.0, top_k: int = 0,
                  seed: int = 0, vocab_size: int = 0):
@@ -29,28 +107,43 @@ class Sampler:
             raise ValueError(f"top_k must be >= 0 (0 = all), got {top_k}")
         self.temperature = float(temperature)
         self.top_k = int(top_k)
+        # the engine ships seeds to the device as uint32; wrap here so
+        # the host oracle keys the same threefry stream for any input.
+        self.seed = int(seed) & 0xFFFFFFFF
         self.vocab_size = int(vocab_size)
-        self._rng = np.random.default_rng(seed)
+        self._n = 0                     # tokens sampled so far
 
     @property
     def greedy(self) -> bool:
         return self.temperature == 0.0
 
+    @property
+    def draws(self) -> int:
+        """Counter of the next draw (== tokens sampled so far)."""
+        return self._n
+
+    def skip(self, n: int) -> None:
+        """Advance the stream past ``n`` draws taken elsewhere (the
+        engine's in-jit horizon sampler shares this stream)."""
+        self._n += n
+
     def __call__(self, logits: np.ndarray) -> int:
         """One token id from a (padded_vocab,) logits row."""
-        z = np.asarray(logits, np.float64)
+        z = np.asarray(logits, np.float32)
         if self.vocab_size and self.vocab_size < len(z):
             z = z[:self.vocab_size]
-        if self.greedy:
-            return int(np.argmax(z))
-        z = z / self.temperature
         if 0 < self.top_k < len(z):
-            kth = np.partition(z, -self.top_k)[-self.top_k]
-            z = np.where(z >= kth, z, -np.inf)
-        z = z - z.max()
-        p = np.exp(z)
-        p /= p.sum()
-        return int(self._rng.choice(len(p), p=p))
+            # mask on raw logits; stable descending ranks pin tie order
+            order = np.argsort(-z, kind="stable")
+            ranks = np.argsort(order, kind="stable")
+            z = np.where(ranks < self.top_k, z,
+                         -np.inf).astype(np.float32)
+        if self.greedy:
+            return int(np.argmax(z))    # greedy consumes no draw
+        y = z / np.float32(self.temperature)
+        g = np.asarray(_gumbel_row(self.seed, self._n, len(z)))
+        self._n += 1
+        return int(np.argmax(y + g))
 
 
 def sampler_for(request, vocab_size: int = 0) -> Sampler:

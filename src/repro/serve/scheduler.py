@@ -224,6 +224,39 @@ class Scheduler:
         return [s for s in self.running
                 if not s.in_prefill and not s.done][:limit]
 
+    def decode_horizon(self, lanes: List[Sequence],
+                       max_horizon: int) -> int:
+        """Safe number of fused decode tokens before the next scheduling
+        event — the whole horizon runs on device with no host decision
+        in between, so it must end no later than the first event that
+        needs one:
+
+        * **finish**: no lane may pass its ``max_new_tokens`` budget
+          mid-horizon (its tokens would be wasted draws and its pages
+          would be held past completion), so the horizon is capped at
+          the minimum remaining budget over the batch;
+        * **prefill pending**: chunked prefill interleaves one chunk per
+          engine step; while any running sequence still has replay to
+          write, the horizon stays 1 so a long prompt cannot be starved
+          by token-time running ahead of chunk-time.
+
+        Admission needs no cap of its own: ``admit()`` runs at every
+        step start, and capacity only changes when lanes finish — which
+        the finish cap pins to step boundaries. Page-table growth and
+        COW inside the horizon are not events either: the engine
+        pre-extends every lane's table for the full horizon (copies
+        applied up front) before dispatch, and a pre-extension that
+        cannot be covered preempts exactly like single-token growth.
+        """
+        if not lanes:
+            return 0
+        if any(s.in_prefill for s in self.running):
+            return 1
+        h = max(1, max_horizon)
+        for s in lanes:
+            h = min(h, s.max_new_tokens - len(s.out))
+        return h
+
     def finish(self, seq: Sequence) -> None:
         """Release page refs; freed/evictable pages make room for the
         next admit() — and registered prompt pages stay hot."""

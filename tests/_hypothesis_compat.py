@@ -6,8 +6,16 @@ tier-1 suite must still collect and run without it. Importing ``given``
 hypothesis is installed, and no-op stand-ins that skip the decorated
 tests (with strategy expressions evaluating to inert placeholders)
 when it is not.
+
+Skipping must never be silent where it matters: CI exports
+``REQUIRE_HYPOTHESIS=1`` (see .github/workflows/ci.yml), which turns a
+missing ``hypothesis`` into a hard collection error instead of five
+quietly-skipped property tests — if the install breaks, CI fails
+loudly rather than green-washing the suite.
 """
 from __future__ import annotations
+
+import os
 
 import pytest
 
@@ -18,6 +26,12 @@ try:
     from hypothesis import strategies as st
     HAVE_HYPOTHESIS = True
 except ImportError:  # pragma: no cover - exercised only without hypothesis
+    if os.environ.get("REQUIRE_HYPOTHESIS"):
+        raise ImportError(
+            "REQUIRE_HYPOTHESIS is set but hypothesis is not importable: "
+            "the property-based tests would be silently skipped. Install "
+            "it (pip install -r requirements-dev.txt) or unset "
+            "REQUIRE_HYPOTHESIS.")
     HAVE_HYPOTHESIS = False
 
     class _AnyStrategy:

@@ -1,0 +1,212 @@
+"""Device-resident decode horizons: the fused decode+sample lax.scan
+hot loop, the counter-keyed threefry sampling stream (host oracle vs
+in-jit device sampler), and the scheduler's event-aware horizon
+truncation."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.models import api
+from repro.serve.engine import PagedEngine, Request
+from repro.serve.sampling import Sampler, sample_tokens
+from repro.serve.scheduler import Scheduler, Sequence
+
+
+@pytest.fixture(scope="module")
+def exact_lm():
+    cfg = get_config("qwen2_0_5b").smoke()
+    params, _ = api.init_params(jax.random.PRNGKey(0), cfg)
+    cfg = dataclasses.replace(cfg, softmax_mode="exact", norm_mode="exact",
+                              logit_int8=False)
+    return cfg, params
+
+
+def _paged(cfg, params, **kw):
+    base = dict(num_blocks=40, block_size=8, max_seq_len=64, max_running=4,
+                decode_batch=4, prefill_chunk=8, backend="pallas")
+    base.update(kw)
+    return PagedEngine(cfg, params, **base)
+
+
+def _requests(cfg, n, rng, plen=16, new=8, **kw):
+    return [Request(prompt=rng.integers(0, cfg.vocab_size, size=plen)
+                    .astype(np.int32), max_new_tokens=new, **kw)
+            for _ in range(n)]
+
+
+# -- engine-level horizon parity ----------------------------------------------
+
+
+def test_horizon_token_parity_exact(exact_lm):
+    """Acceptance: --decode-horizon 1 and H>1 produce token-identical
+    outputs in exact mode, greedy and stochastic alike."""
+    cfg, params = exact_lm
+    rng = np.random.default_rng(31)
+    reqs = (_requests(cfg, 3, rng) +
+            _requests(cfg, 2, rng, temperature=0.9, top_k=6, new=7))
+    outs = {h: _paged(cfg, params, decode_horizon=h).generate(reqs)
+            for h in (1, 3, 8)}
+    assert outs[1] == outs[3] == outs[8]
+    assert all(len(o) == r.max_new_tokens for o, r in zip(outs[8], reqs))
+
+
+def test_horizon_parity_across_preemption(exact_lm):
+    """A tight pool (watermark 0) forces recompute-preemption mid-trace;
+    horizon replay must land on the same tokens as the roomy h=1 run."""
+    cfg, params = exact_lm
+    rng = np.random.default_rng(32)
+    reqs = _requests(cfg, 5, rng, plen=16, new=8)
+    roomy = _paged(cfg, params, decode_horizon=1).generate(reqs)
+    tight_eng = _paged(cfg, params, num_blocks=8, watermark=0,
+                       decode_horizon=8)
+    tight = tight_eng.generate(reqs)
+    assert tight == roomy
+    assert tight_eng.stats()["preemptions"] > 0
+    tight_eng.cache.check_refcounts()
+
+
+def test_horizon_parity_across_cow_fork(exact_lm):
+    """Identical prompts decoding concurrently share prompt pages; the
+    horizon pre-extension COWs the boundary page up front. Outputs must
+    match the cold-cache h=1 run and COW must actually fire."""
+    cfg, params = exact_lm
+    rng = np.random.default_rng(33)
+    shared = rng.integers(0, cfg.vocab_size, size=20).astype(np.int32)
+    reqs = [Request(prompt=shared, max_new_tokens=6),
+            Request(prompt=shared, max_new_tokens=6)]
+    cold = _paged(cfg, params, prefix_cache=False,
+                  decode_horizon=1).generate(reqs)
+    warm_eng = _paged(cfg, params, decode_horizon=8)
+    warm_eng.generate(reqs)               # populate the index
+    warm = warm_eng.generate(reqs)        # both prompts hit + fork
+    assert warm == cold
+    st = warm_eng.stats()
+    assert st["cow_copies"] > 0
+    assert st["prefix_hit_rate"] > 0
+    warm_eng.cache.check_refcounts()
+
+
+def test_tokens_per_dispatch_and_stats(exact_lm):
+    """Horizon decode batches tokens per device dispatch; stats expose
+    the ratio the benchmark records."""
+    cfg, params = exact_lm
+    rng = np.random.default_rng(34)
+    reqs = _requests(cfg, 2, rng, plen=8, new=16)
+    eng = _paged(cfg, params, decode_horizon=8, max_running=2,
+                 decode_batch=2)
+    eng.generate(reqs)
+    st = eng.stats()
+    assert st["decode_tokens"] == 2 * 15   # first token comes from prefill
+    assert st["decode_dispatches"] < st["decode_tokens"] / 2
+    assert st["tokens_per_dispatch"] > 1.0
+    eng.reset_stats()
+    assert eng.stats()["decode_dispatches"] == 0
+    assert eng.stats()["tokens_per_dispatch"] == 0
+
+
+def test_invalid_horizon_rejected(exact_lm):
+    cfg, params = exact_lm
+    with pytest.raises(ValueError, match="decode_horizon"):
+        _paged(cfg, params, decode_horizon=0)
+
+
+# -- scheduler horizon computation --------------------------------------------
+
+
+def _seq(sid, out_len, max_new, prefilled_short=0):
+    s = Sequence(sid, np.arange(4, dtype=np.int32), max_new)
+    s.out = list(range(out_len))
+    s.prefilled = s.replay_len - prefilled_short
+    return s
+
+
+def test_decode_horizon_event_truncation(exact_lm):
+    cfg, _ = exact_lm
+    from repro.serve.kv_cache import PagedKVCache
+    cache = PagedKVCache(cfg, num_blocks=8, block_size=4, max_seq_len=32)
+    sched = Scheduler(cache, max_running=4, prefill_chunk=4)
+    a, b = _seq(0, 2, 16), _seq(1, 2, 5)
+    sched.running = [a, b]
+    # finish event: capped at the smallest remaining budget (5 - 2)
+    assert sched.decode_horizon([a, b], 8) == 3
+    assert sched.decode_horizon([a], 8) == 8
+    assert sched.decode_horizon([a], 0) == 1      # floor
+    assert sched.decode_horizon([], 8) == 0       # nothing to decode
+    # prefill event: any running sequence mid-replay pins the horizon
+    c = _seq(2, 2, 16, prefilled_short=1)
+    assert c.in_prefill
+    sched.running.append(c)
+    assert sched.decode_horizon([a, b], 8) == 1
+
+
+# -- sampling: host oracle vs in-jit device sampler ---------------------------
+
+
+def test_host_device_sampler_agreement_grid():
+    """Acceptance: the numpy Sampler and the in-jit sample_tokens agree
+    bit-for-bit across temperature/top_k/seed grids — ties included."""
+    vocab = 41
+    rng = np.random.default_rng(0)
+    fn = jax.jit(sample_tokens, static_argnums=(5,))
+    checked = 0
+    for trial in range(8):
+        b = 6
+        logits = rng.normal(0, 3, (b, 48)).astype(np.float32)
+        # force ties: a shared maximum and a tie at the k-th value
+        logits[0, 3] = logits[0, 11] = logits[0].max() + 1.0
+        logits[1, 2] = logits[1, 5] = logits[1, 9] = logits[1].max() + 0.5
+        temps = rng.choice([0.0, 0.5, 1.0, 2.5], b).astype(np.float32)
+        ks = rng.choice([0, 1, 2, 3, 40, 64], b).astype(np.int32)
+        seeds = rng.integers(0, 2**31, b).astype(np.uint32)
+        ctrs = rng.integers(0, 50, b).astype(np.int32)
+        dev = np.asarray(fn(jnp.asarray(logits), jnp.asarray(temps),
+                            jnp.asarray(ks), jnp.asarray(seeds),
+                            jnp.asarray(ctrs), vocab))
+        for i in range(b):
+            host = Sampler(temperature=float(temps[i]), top_k=int(ks[i]),
+                           seed=int(seeds[i]), vocab_size=vocab)
+            host._n = int(ctrs[i])       # jump the stream to the counter
+            assert host(logits[i]) == dev[i], (
+                f"trial {trial} lane {i}: temp={temps[i]} k={ks[i]} "
+                f"seed={seeds[i]} ctr={ctrs[i]}")
+            checked += 1
+    assert checked == 48
+
+
+def test_top_k_masks_raw_logits_exact_k_on_ties():
+    """Pinned top-k semantics: the mask is computed on raw logits and
+    keeps exactly k candidates; ties at the k-th value resolve toward
+    lower indices (never >k survivors)."""
+    logits = np.full(10, -5.0, np.float32)
+    tied = [2, 5, 8]
+    for i in tied:
+        logits[i] = 4.0                  # three-way tie at the top
+    counts = np.zeros(10, int)
+    s = Sampler(temperature=1.5, top_k=2, seed=0, vocab_size=10)
+    for _ in range(64):
+        counts[s(logits)] += 1
+    assert counts[8] == 0                # third tied index masked out
+    assert counts[2] > 0 and counts[5] > 0
+    assert counts.sum() == counts[2] + counts[5]
+    # greedy tie-break: first index of the max, top-k irrelevant
+    assert Sampler(top_k=2, vocab_size=10)(logits) == 2
+
+
+def test_sampler_counter_stream_is_replayable():
+    """Draw n depends only on (seed, n): skipping draws on the host and
+    taking them on the device is the same stream."""
+    logits = np.random.default_rng(1).normal(0, 2, 32).astype(np.float32)
+    a = Sampler(temperature=1.0, seed=9, vocab_size=32)
+    stream = [a(logits) for _ in range(6)]
+    b = Sampler(temperature=1.0, seed=9, vocab_size=32)
+    b.skip(3)                            # taken in-jit elsewhere
+    assert [b(logits) for _ in range(3)] == stream[3:]
+    dev = np.asarray(sample_tokens(
+        jnp.asarray(np.tile(logits, (6, 1))),
+        jnp.full((6,), 1.0, jnp.float32), jnp.zeros((6,), jnp.int32),
+        jnp.full((6,), 9, jnp.uint32), jnp.arange(6, dtype=jnp.int32), 32))
+    assert dev.tolist() == stream

@@ -50,6 +50,56 @@ def test_generate_deterministic(small_lm, rng):
     assert a == b
 
 
+def test_dense_ragged_final_chunk_single_compile(exact_lm, rng):
+    """The final ragged chunk of a trace is padded to ``batch_size`` with
+    masked lanes, so one compiled (batch, prompt_len) shape serves the
+    whole trace — the dense engine must not recompile per ragged tail
+    (the PR 3 bench-warmup artifact's root cause)."""
+    cfg, params = exact_lm
+    eng = Engine(cfg, params, batch_size=4, max_len=32)
+    reqs = _requests(cfg, 6, rng)        # chunks of 4 and 2(+2 padding)
+    outs = eng.generate(reqs)
+    assert len(outs) == 6 and all(len(o) == 6 for o in outs)
+    assert eng._prefill._cache_size() == 1
+    assert eng._decode._cache_size() == 1
+    # padding lanes are dropped, not returned, and (in exact mode, where
+    # lanes are numerically independent) don't perturb real lanes: a
+    # full-batch wave of the same requests matches per-lane.
+    alone = eng.generate(reqs[4:6] + reqs[:2])
+    assert alone[:2] == outs[4:6]
+    assert eng._prefill._cache_size() == 1
+
+
+def test_null_page_garbage_invariance(exact_lm, rng):
+    """Null-page invariant (see serve/kv_cache.py): page 0 is
+    write-absorbing and never read as signal. Padded prefill tails,
+    idle decode lanes and COW padding all scatter into it, so engine
+    outputs must be invariant to arbitrary garbage pre-loaded there —
+    on both attention backends."""
+    import jax.numpy as jnp
+    cfg, params = exact_lm
+    reqs = _requests(cfg, 2, np.random.default_rng(17), plen=10, new=6)
+    for backend in ("reference", "pallas"):
+        outs = []
+        for garbage in (False, True):
+            # decode_batch > live lanes forces null decode lanes; the
+            # 10-token prompt against prefill_chunk=8 forces a padded
+            # (n_valid-masked) final prefill chunk.
+            eng = PagedEngine(cfg, params, num_blocks=16, block_size=8,
+                              max_seq_len=64, max_running=2,
+                              decode_batch=3, prefill_chunk=8,
+                              backend=backend)
+            if garbage:
+                g = np.random.default_rng(99).normal(0, 50.0, (
+                    cfg.n_layers, eng.cache.block_size, cfg.n_kv_heads,
+                    cfg.head_dim))
+                for name, pool in eng.cache.pools.items():
+                    eng.cache.pools[name] = pool.at[:, 0].set(
+                        jnp.asarray(g).astype(pool.dtype))
+            outs.append(eng.generate(reqs))
+        assert outs[0] == outs[1], f"backend {backend} read the null page"
+
+
 def test_sole_vs_exact_generation_mostly_agree(small_lm, rng):
     """No-retraining claim at generation level: SOLE decode tracks exact."""
     cfg, params = small_lm
