@@ -1,21 +1,33 @@
 """Bench-regression guard: fail CI when a freshly recorded
-BENCH_serve.json loses too much paged tok/s against the committed
-baseline.
+BENCH_serve.json regresses too far against the committed baseline.
 
 CI copies the committed ``benchmarks/BENCH_serve.json`` aside, reruns
 ``serve_throughput.py --record``, then runs this script against the
-copy. Every paged-engine ``tok_s`` entry in the baseline (any dict
-whose ``engine`` label starts with ``paged``, found recursively) is
-matched by JSON path in the fresh report and must be at least
-``(1 - max_drop)`` of its baseline value. Wall-clock numbers on shared
-runners are noisy — the 20% default tolerance plus the bench's own
-one-retry policy absorbs jitter while still catching a step-function
-regression (e.g. the decode hot loop falling back to per-token
-dispatch). ``tokens_per_dispatch`` is guarded with the same floor but
-is *deterministic* (the trace clock is engine steps, not wall time),
-so a drop there is a real scheduling/horizon regression regardless of
-runner speed. Missing paths fail loudly: a renamed entry must update
-the committed baseline in the same PR.
+copy. Every paged-engine entry (any dict whose ``engine`` label starts
+with ``paged``, found recursively) contributes its guarded metrics:
+
+* **throughput** (``tok_s``, ``tokens_per_dispatch``): fail when the
+  fresh value drops below ``(1 - max_drop)`` of baseline. Wall-clock
+  tok/s on shared runners is noisy — the 20% default tolerance plus
+  the bench's own one-retry policy absorbs jitter while still catching
+  a step-function regression. ``tokens_per_dispatch`` is deterministic
+  (trace clock = engine steps), so a drop there is a real scheduling /
+  horizon regression regardless of runner speed.
+* **latency** (``ttft_p99_steps``, ``itl_p99_steps``): direction
+  inverted — fail when the fresh value *rises* above
+  ``(1 + max_drop)`` of baseline. The guard watches the step-based
+  percentiles (deterministic) rather than the wall-ms ones (recorded
+  for operators, too noisy to gate on).
+
+Regression bounds apply to metrics present in **both** reports. The
+asymmetric cases split by direction: a metric newly recorded but
+absent from the committed baseline (e.g. the first recording that
+adds TTFT/ITL fields) is *warned about, not failed* — adding an
+instrumented metric must never break CI before its first baseline
+lands (commit the refreshed baseline to promote it into the guard).
+A baseline metric missing from the fresh report still fails loudly —
+a renamed/restructured (or truncated) report must update the
+committed baseline in the same PR, never silently disarm the gate.
 
 Run:  python benchmarks/check_bench_regression.py \
           --baseline /tmp/bench_baseline.json \
@@ -28,27 +40,25 @@ import json
 import sys
 
 
+# higher is better: fail on a drop.
 GUARDED_METRICS = ("tok_s", "tokens_per_dispatch")
+# lower is better (latency percentiles): fail on a rise. Step-based =
+# deterministic; the *_ms twins are informational only.
+LATENCY_METRICS = ("ttft_p99_steps", "itl_p99_steps")
 
 
 def paged_metrics(node, path=""):
-    """Yield (json_path, metric, value) for every paged-engine result."""
+    """{(json_path, metric): value} for every paged-engine result."""
+    found = {}
     if isinstance(node, dict):
         eng = node.get("engine")
         if isinstance(eng, str) and eng.startswith("paged"):
-            for metric in GUARDED_METRICS:
-                if metric in node:
-                    yield path, metric, float(node[metric])
+            for metric in GUARDED_METRICS + LATENCY_METRICS:
+                if isinstance(node.get(metric), (int, float)):
+                    found[(path, metric)] = float(node[metric])
         for k, v in node.items():
-            yield from paged_metrics(v, f"{path}/{k}")
-
-
-def lookup(node, path: str):
-    for key in path.strip("/").split("/"):
-        if not isinstance(node, dict) or key not in node:
-            return None
-        node = node[key]
-    return node
+            found.update(paged_metrics(v, f"{path}/{k}"))
+    return found
 
 
 def main() -> int:
@@ -58,42 +68,61 @@ def main() -> int:
     ap.add_argument("--fresh", required=True,
                     help="freshly recorded BENCH_serve.json")
     ap.add_argument("--max-drop", type=float, default=0.2,
-                    help="max fractional tok/s drop before failing")
+                    help="max fractional regression before failing "
+                         "(tok/s drop, or latency-percentile rise)")
     args = ap.parse_args()
 
     with open(args.baseline) as f:
-        baseline = json.load(f)
+        base = paged_metrics(json.load(f))
     with open(args.fresh) as f:
-        fresh = json.load(f)
+        fresh = paged_metrics(json.load(f))
 
-    entries = list(paged_metrics(baseline))
-    if not entries:
+    if not base:
         print("bench-regression: no paged entries in baseline — "
               "nothing to guard (first recording?)")
         return 0
 
+    # asymmetry is one-directional: a metric newly *recorded* (absent
+    # from the committed baseline) only warns, so first recordings of
+    # TTFT/ITL-style fields never break CI — but a *baseline* metric
+    # missing from the fresh report still fails loudly, so a renamed or
+    # truncated report cannot silently disarm the gate.
     failures = []
-    for path, metric, base in entries:
-        node = lookup(fresh, path)
-        now = node.get(metric) if isinstance(node, dict) else None
-        if now is None:
-            failures.append(f"{path}.{metric}: present in baseline "
-                            f"({base}) but missing from fresh report")
-            continue
-        floor = base * (1.0 - args.max_drop)
-        verdict = "FAIL" if now < floor else "ok"
-        print(f"{verdict}  {path}.{metric}: {base} -> {now} "
-              f"(floor {floor:.2f})")
-        if now < floor:
-            failures.append(f"{path}.{metric}: {base} -> {now} "
-                            f"(> {args.max_drop:.0%} drop)")
+    for path, metric in sorted(base.keys() - fresh.keys()):
+        failures.append(f"{path}.{metric}: present in baseline "
+                        f"({base[(path, metric)]}) but missing from the "
+                        f"fresh report — renamed entry must update the "
+                        f"committed baseline in the same PR")
+        print(f"FAIL  {failures[-1]}")
+    for path, metric in sorted(fresh.keys() - base.keys()):
+        print(f"warn  {path}.{metric}: newly recorded "
+              f"({fresh[(path, metric)]}) — not guarded until the "
+              f"committed baseline includes it")
+    for key in sorted(base.keys() & fresh.keys()):
+        path, metric = key
+        b, now = base[key], fresh[key]
+        if metric in LATENCY_METRICS:
+            # +1 step of absolute slack so a tiny baseline (p99 of 0-2
+            # steps) isn't failed by one step of scheduling drift.
+            ceiling = max(b * (1.0 + args.max_drop), b + 1.0)
+            bad = now > ceiling
+            bound = f"ceiling {ceiling:.2f}"
+        else:
+            floor = b * (1.0 - args.max_drop)
+            bad = now < floor
+            bound = f"floor {floor:.2f}"
+        print(f"{'FAIL' if bad else 'ok'}  {path}.{metric}: "
+              f"{b} -> {now} ({bound})")
+        if bad:
+            failures.append(f"{path}.{metric}: {b} -> {now} "
+                            f"(> {args.max_drop:.0%} regression)")
     if failures:
         print("bench-regression guard FAILED:", file=sys.stderr)
         for msg in failures:
             print("  " + msg, file=sys.stderr)
         return 1
-    print(f"bench-regression guard passed ({len(entries)} guarded "
-          f"paged metrics)")
+    print(f"bench-regression guard passed "
+          f"({len(base.keys() & fresh.keys())} guarded paged metrics)")
     return 0
 
 

@@ -1,9 +1,9 @@
 """Serve-engine throughput: dense-slot baseline vs paged continuous
-batching, decode-horizon-1 vs fused multi-token horizons, and
-prefix-cache on vs off on a shared-system-prompt trace (qwen2_0_5b
-smoke, CPU interpret).
+batching, decode-horizon-1 vs fused multi-token horizons, prefix-cache
+on vs off on a shared-system-prompt trace, and early-exit (eos) on vs
+off on an open-loop streaming trace (qwen2_0_5b smoke, CPU interpret).
 
-Two Poisson traces (inter-arrival times measured in engine steps):
+Poisson traces (inter-arrival times measured in engine steps):
 
   * random trace   — independent random prompts; exercises paged-vs-
                      dense oversubscription (PR-1 claim) and the decode
@@ -18,7 +18,16 @@ Two Poisson traces (inter-arrival times measured in engine steps):
                      tok/s, with hit-rate > 0 from engine.stats()), and
                      the exact-mode horizon-parity sweep (horizon 1 vs
                      8, across forced preemptions and prefix-cache
-                     hits, outputs must be token-identical).
+                     hits, outputs must be token-identical);
+  * eos trace      — the open-loop AsyncEngine trace where half the
+                     requests carry an ``eos_ids`` terminator chosen to
+                     fire ~half-way through their token budget (this
+                     PR's claim: early exit finishes the trace in
+                     measurably fewer engine steps than the same trace
+                     with eos ignored — the pre-fix behavior — with
+                     exact-mode token parity for the pre-stop tokens,
+                     zero leaked pages, and p50/p99 TTFT+ITL recorded
+                     from the streaming loop's latency accounting).
 
 Reported per engine: tok/s (CPU interpret mode: magnitudes are
 relative, not TPU numbers), cache_tokens (HBM committed up front),
@@ -47,6 +56,7 @@ import numpy as np
 from repro.configs.base import get_config
 from repro.models import api
 from repro.serve.engine import Engine, PagedEngine, Request
+from repro.serve.loop import AsyncEngine
 
 ARCH = "qwen2_0_5b"
 BENCH_PATH = os.path.join(os.path.dirname(__file__), "BENCH_serve.json")
@@ -118,7 +128,7 @@ def run_paged(cfg, params, trace, *, num_blocks=17, block_size=8,
     while pending or eng.sched.has_work:
         while pending and pending[0][0] <= eng.steps:
             _, req = pending.pop(0)
-            order.append(eng.sched.submit(req.prompt, req.max_new_tokens))
+            order.append(eng.submit(req).seq_id)
         if eng.sched.has_work:
             eng.step()
         elif pending:
@@ -155,6 +165,87 @@ def run_paged(cfg, params, trace, *, num_blocks=17, block_size=8,
     }
 
 
+def run_async(cfg, params, trace, *, num_blocks=48, block_size=8,
+              max_seq_len=64, backend="pallas", decode_horizon=8,
+              label=None):
+    """Open-loop run through the AsyncEngine streaming loop: Poisson
+    arrivals admitted FCFS at their (engine-step) arrival times, tokens
+    surfaced per step, latency accounted per request. Verifies the
+    early-exit reclamation invariant (zero leaked pages) after the
+    trace drains."""
+    eng = PagedEngine(cfg, params, num_blocks=num_blocks,
+                      block_size=block_size, max_seq_len=max_seq_len,
+                      max_running=6, decode_batch=6, prefill_chunk=8,
+                      decode_horizon=decode_horizon, backend=backend)
+    # warm both decode-scan variants: plain, and use_eos=True via an
+    # eos id that can never be sampled (ids are < vocab_size), so the
+    # timed run compiles nothing whether or not its lanes carry eos.
+    warm = Request(prompt=np.full((9,), cfg.vocab_size - 1, np.int32),
+                   max_new_tokens=2 * decode_horizon)
+    eng.generate([warm])
+    eng.generate([dataclasses.replace(warm, eos_ids=(cfg.vocab_size,))])
+    eng.reset_stats()
+    loop = AsyncEngine(eng)
+    t0 = time.perf_counter()
+    handles = [loop.add_request(r, arrival=int(t)) for t, r in trace]
+    loop.run()
+    dt = time.perf_counter() - t0
+    outs = [h.tokens for h in handles]
+    ntok = sum(len(o) for o in outs)
+    eng.cache.check_refcounts()
+    assert eng.cache.blocks_in_use == 0, "leaked pages after the trace"
+    st = loop.stats()
+    est = st["engine"]
+    return outs, {
+        "engine": label or f"paged[{backend}]+async",
+        "decode_horizon": decode_horizon,
+        "tok_s": round(ntok / dt, 2),
+        "tokens": ntok,
+        "wall_s": round(dt, 2),
+        "engine_steps": eng.steps,
+        "decode_dispatches": est["decode_dispatches"],
+        "tokens_per_dispatch": est["tokens_per_dispatch"],
+        "truncated_tokens": est["truncated_tokens"],
+        "reclaimed_pages": est["reclaimed_pages"],
+        "finish_reasons": st["finish_reasons"],
+        "ttft_p50_steps": st["ttft_steps"]["p50"],
+        "ttft_p99_steps": st["ttft_steps"]["p99"],
+        "itl_p50_steps": st["itl_steps"]["p50"],
+        "itl_p99_steps": st["itl_steps"]["p99"],
+        "ttft_p50_ms": st["ttft_ms"]["p50"],
+        "ttft_p99_ms": st["ttft_ms"]["p99"],
+        "itl_p50_ms": st["itl_ms"]["p50"],
+        "itl_p99_ms": st["itl_ms"]["p99"],
+    }
+
+
+def with_eos_at_half(trace, base_outs, every=2):
+    """Give every ``every``-th request an eos id chosen from its own
+    eos-free continuation at ~half its budget, so early exit fires
+    mid-stream deterministically (greedy exact mode: the same token
+    stream replays, now terminated at its first occurrence)."""
+    out = []
+    for i, (t, r) in enumerate(trace):
+        if i % every == 0:
+            tok = base_outs[i][r.max_new_tokens // 2]
+            r = dataclasses.replace(r, eos_ids=(int(tok),))
+        out.append((t, r))
+    return out
+
+
+def expected_early_exit(trace, eos_trace, base_outs):
+    """Host-oracle outputs for the eos trace: the eos-free continuation
+    truncated at the first occurrence of the request's eos id."""
+    want = []
+    for (_, r), (_, re), base in zip(trace, eos_trace, base_outs):
+        if re.eos_ids:
+            hits = [i for i, t in enumerate(base) if t in re.eos_ids]
+            want.append(base[:hits[0] + 1] if hits else list(base))
+        else:
+            want.append(list(base))
+    return want
+
+
 def run(quick: bool = False):
     """benchmarks/run.py section: CSV rows."""
     cfg = get_config(ARCH).smoke()
@@ -181,6 +272,17 @@ def run(quick: bool = False):
           f"tok_s={pfx_on['tok_s']} hit_rate={pfx_on['prefix_hit_rate']}"
     yield f"serve_prefix_cache_off,{1e6 / max(pfx_off['tok_s'], 1e-9):.1f}," \
           f"tok_s={pfx_off['tok_s']}"
+    ecfg = dataclasses.replace(cfg, softmax_mode="exact",
+                               norm_mode="exact", logit_int8=False)
+    etrace = make_trace(ecfg, max(n - 8, 3), np.random.default_rng(3),
+                        rate=2.0, new_tokens=16)
+    base_outs, base = run_async(ecfg, params, etrace)
+    _, eos = run_async(ecfg, params, with_eos_at_half(etrace, base_outs),
+                       label="paged[pallas]+async+eos")
+    yield f"serve_early_exit,{1e6 / max(eos['tok_s'], 1e-9):.1f}," \
+          f"tok_s={eos['tok_s']} steps={eos['engine_steps']}" \
+          f" vs_no_eos_steps={base['engine_steps']}" \
+          f" ttft_p99_steps={eos['ttft_p99_steps']}"
 
 
 def main():
@@ -237,6 +339,31 @@ def main():
         "preemptions_forced": pre["preemptions"],
     }
 
+    # early-exit (eos) open-loop trace, streamed through the AsyncEngine
+    # loop: exact mode so the eos-free run is the token-level host
+    # oracle for the eos run's pre-stop tokens. Half the requests get a
+    # terminator from their own continuation at ~half budget, so the
+    # same trace completes in deterministically fewer engine steps —
+    # ignoring eos (the `base` run) is exactly the pre-fix behavior.
+    etrace = make_trace(ecfg, args.requests, np.random.default_rng(3),
+                        rate=2.0, new_tokens=32)
+    base_outs, base = run_async(ecfg, params, etrace,
+                                backend=args.backend,
+                                label=f"paged[{args.backend}]+async")
+    eos_trace = with_eos_at_half(etrace, base_outs)
+    eos_outs, eos = run_async(ecfg, params, eos_trace,
+                              backend=args.backend,
+                              label=f"paged[{args.backend}]+async+eos")
+    early_exit = {
+        "requests": len(etrace),
+        "requests_with_eos": sum(1 for _, r in eos_trace if r.eos_ids),
+        "no_eos": base,
+        "eos": eos,
+        "steps_saved": base["engine_steps"] - eos["engine_steps"],
+        "tokens_pre_stop_parity":
+            eos_outs == expected_early_exit(etrace, eos_trace, base_outs),
+    }
+
     # shared-system-prompt trace, prefix cache on vs off at equal pool
     shared = make_shared_trace(cfg, max(args.requests - 4, 4),
                                np.random.default_rng(1))
@@ -270,6 +397,7 @@ def main():
                 pfx_on["tok_s"] / max(pfx_off["tok_s"], 1e-9), 3),
             "outputs_identical": on_outs == off_outs,
         },
+        "early_exit": early_exit,
     }
     print(json.dumps(report, indent=2))
     if args.record:
@@ -299,6 +427,20 @@ def main():
             "the tight-pool run must actually preempt"
         assert eh8["prefix_hit_rate"] > 0, \
             "the parity sweep must actually hit the prefix cache"
+        # early-exit claims (all deterministic: the trace clock is
+        # engine steps and exact mode replays token-identically):
+        # eos must save engine steps over the eos-ignoring run, the
+        # pre-stop tokens must match the host oracle exactly, horizon
+        # tails must actually be discarded, and nothing may leak
+        # (run_async sweeps check_refcounts / blocks_in_use == 0).
+        assert early_exit["steps_saved"] > 0, \
+            "early exit must finish the trace in fewer engine steps"
+        assert early_exit["tokens_pre_stop_parity"], \
+            "eos outputs must be the truncated eos-free continuations"
+        assert eos["finish_reasons"].get("eos", 0) > 0, \
+            "the eos trace must actually finish requests by eos"
+        assert eos["truncated_tokens"] > 0, \
+            "mid-horizon stops must discard horizon-tail draws"
         with open(BENCH_PATH, "w") as f:
             json.dump(report, f, indent=2)
             f.write("\n")

@@ -14,6 +14,11 @@ Example (CPU smoke):
 Paged continuous batching (dense LMs):
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2_0_5b --smoke \
     --engine paged --ops-backend pallas
+
+Open-loop streaming (Poisson arrivals through the AsyncEngine run
+loop, with early exit on --eos-ids and p50/p99 TTFT+ITL reported):
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2_0_5b --smoke \
+    --engine paged --open-loop 0.5 --eos-ids 7 --stream
 """
 from __future__ import annotations
 
@@ -28,6 +33,7 @@ from repro.configs.base import get_config
 from repro.launch.mesh import make_mesh, make_rules
 from repro.models import api
 from repro.serve.engine import Engine, PagedEngine, Request
+from repro.serve.loop import AsyncEngine
 
 
 def main() -> None:
@@ -60,6 +66,15 @@ def main() -> None:
                          "(0 = full vocab)")
     ap.add_argument("--sample-seed", type=int, default=0,
                     help="base seed for per-request sampling streams")
+    ap.add_argument("--eos-ids", default="",
+                    help="comma-separated token ids that end a request "
+                         "early (finish reason 'eos')")
+    ap.add_argument("--open-loop", type=float, default=0.0, metavar="RATE",
+                    help="serve through the AsyncEngine run loop with "
+                         "Poisson arrivals at RATE requests per engine "
+                         "step (paged engine only; 0 = closed batch)")
+    ap.add_argument("--stream", action="store_true",
+                    help="print tokens as they surface (open-loop mode)")
     ap.add_argument("--ops-backend",
                     choices=("auto", "reference", "pallas"), default="auto",
                     help="repro.ops execution backend for softmax/norm/"
@@ -82,11 +97,12 @@ def main() -> None:
 
     params, _ = api.init_params(jax.random.PRNGKey(args.seed), cfg)
     rng = np.random.default_rng(args.seed)
+    eos_ids = tuple(int(t) for t in args.eos_ids.split(",") if t.strip())
     reqs = [Request(prompt=rng.integers(0, cfg.vocab_size,
                                         size=args.prompt_len).astype(np.int32),
                     max_new_tokens=args.new_tokens,
                     temperature=args.temperature, top_k=args.top_k,
-                    seed=args.sample_seed + i)
+                    seed=args.sample_seed + i, eos_ids=eos_ids)
             for i in range(args.requests)]
     max_len = args.prompt_len + args.new_tokens
     if args.engine == "paged":
@@ -101,6 +117,37 @@ def main() -> None:
     else:
         eng = Engine(cfg, params, batch_size=args.batch, max_len=max_len,
                      rules=rules)
+    if args.open_loop > 0:
+        if args.engine != "paged":
+            raise SystemExit("--open-loop requires --engine paged")
+        loop = AsyncEngine(eng)
+        arrivals = np.cumsum(
+            rng.exponential(1.0 / args.open_loop, len(reqs))).astype(int)
+        on_token = None
+        if args.stream:
+            def on_token(h, tok):
+                print(f"  step {loop.now}: req@{h.arrival} -> {tok}")
+        t0 = time.perf_counter()
+        handles = [loop.add_request(r, arrival=int(a), on_token=on_token)
+                   for r, a in zip(reqs, arrivals)]
+        loop.run()
+        dt = time.perf_counter() - t0
+        outs = [h.tokens for h in handles]
+        total = sum(len(o) for o in outs)
+        st = loop.stats()
+        print(f"arch={cfg.name} engine=paged(open-loop) "
+              f"requests={len(reqs)} generated={total} tokens "
+              f"in {dt:.2f}s ({total/dt:.1f} tok/s, "
+              f"softmax={cfg.softmax_mode}, norm={cfg.norm_mode})")
+        print(f"finish_reasons: {st['finish_reasons']}")
+        print(f"TTFT steps p50/p99: {st['ttft_steps']['p50']}/"
+              f"{st['ttft_steps']['p99']}  ms: {st['ttft_ms']['p50']}/"
+              f"{st['ttft_ms']['p99']}")
+        print(f"ITL  steps p50/p99: {st['itl_steps']['p50']}/"
+              f"{st['itl_steps']['p99']}  ms: {st['itl_ms']['p50']}/"
+              f"{st['itl_ms']['p99']}")
+        print("engine stats:", st["engine"])
+        return
     t0 = time.perf_counter()
     outs = eng.generate(reqs)
     dt = time.perf_counter() - t0

@@ -276,9 +276,10 @@ def decode_step_paged(params, pools, token: Array, pos: Array,
 
 def decode_horizon_paged(params, pools, token: Array, pos: Array,
                          tables: Array, temperature: Array, top_k: Array,
-                         seed: Array, counter: Array, cfg: ArchConfig, *,
+                         seed: Array, counter: Array, eos_ids: Array,
+                         cfg: ArchConfig, *,
                          num_steps: int, use_top_k: bool = True,
-                         stochastic: bool = True,
+                         stochastic: bool = True, use_eos: bool = True,
                          backend: Optional[str] = None, ffn_apply=None):
     """``num_steps`` fused decode+sample steps in one ``lax.scan``.
 
@@ -296,12 +297,25 @@ def decode_horizon_paged(params, pools, token: Array, pos: Array,
     forward. Only the (B, num_steps) sampled ids come back to the host
     — per-token logits transfers are gone.
 
+    **Early exit / eos.** ``eos_ids`` (B, E) is each lane's ``-1``-padded
+    terminator table; with ``use_eos`` (static, skip when no lane has
+    eos ids) each step also emits the lane's eos membership mask
+    (:func:`serve.sampling.eos_hits`). The scan cannot stop early — its
+    shape is static — so a lane that samples an eos keeps decoding
+    self-absorbing garbage for the rest of the horizon (writes stay
+    inside its pre-extended, private pages); the host reads the
+    returned ``(B, num_steps)`` done mask, truncates the lane's output
+    at the first hit and reclaims the unused page tail
+    (``PagedKVCache.truncate``). Tokens after the first hit never enter
+    the sampler stream.
+
     Null lanes (all-zero table rows) are self-absorbing: their writes
     land in the null page and their sampled garbage feeds only
     themselves (see the null-page invariant in serve/kv_cache.py).
-    Returns (tokens (B, num_steps) int32, pools).
+    Returns (tokens (B, num_steps) int32, eos (B, num_steps) bool,
+    pools).
     """
-    from repro.serve.sampling import sample_tokens
+    from repro.serve.sampling import eos_hits, sample_tokens
 
     def step(carry, i):
         pools, tok, p = carry
@@ -311,8 +325,10 @@ def decode_horizon_paged(params, pools, token: Array, pos: Array,
         nxt = sample_tokens(logits, temperature, top_k, seed,
                             counter + i, cfg.vocab_size,
                             use_top_k=use_top_k, stochastic=stochastic)
-        return (pools, nxt, p + 1), nxt
+        done = (eos_hits(nxt, eos_ids) if use_eos
+                else jnp.zeros(nxt.shape, jnp.bool_))
+        return (pools, nxt, p + 1), (nxt, done)
 
-    (pools, _, _), toks = jax.lax.scan(
+    (pools, _, _), (toks, done) = jax.lax.scan(
         step, (pools, token, pos), jnp.arange(num_steps, dtype=jnp.int32))
-    return jnp.transpose(toks), pools
+    return jnp.transpose(toks), jnp.transpose(done), pools

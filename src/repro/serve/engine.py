@@ -33,7 +33,7 @@ from repro import ops
 from repro.configs.base import ArchConfig
 from repro.models import api
 from repro.serve.kv_cache import PagedKVCache, copy_pages
-from repro.serve.sampling import sampler_for
+from repro.serve.sampling import apply_finish, eos_table, sampler_for
 from repro.serve.scheduler import Scheduler, Sequence
 from repro.sharding import rules as R
 
@@ -47,6 +47,12 @@ class Request:
     temperature: float = 0.0     # 0 = greedy argmax
     top_k: int = 0               # 0 = full vocab
     seed: int = 0                # per-request sampling stream
+    # finish events (see serve/sampling.py): sampling any of eos_ids
+    # ends the request ("eos"); stop holds multi-token sequences
+    # matched over the generated tokens ("stop"). The finishing token /
+    # sequence is kept in the output; anything after it is discarded.
+    eos_ids: Tuple[int, ...] = ()
+    stop: Tuple[Tuple[int, ...], ...] = ()
     out: Optional[List[int]] = None
 
 
@@ -127,6 +133,9 @@ class PagedEngine:
         self.steps = 0
         self.decode_tokens = 0
         self.decode_dispatches = 0
+        self.truncated_tokens = 0        # horizon-tail draws discarded
+        self.reclaimed_pages = 0         # pages handed back by truncate
+        self.finish_reasons: Dict[str, int] = {}
         self._finished: Dict[int, List[int]] = {}
 
         def _prefill(params, pools, tokens, q_start, n_valid, tables):
@@ -135,17 +144,17 @@ class PagedEngine:
                                             backend=backend)
 
         def _decode_h(params, pools, token, pos, tables, temperature,
-                      top_k, seed, counter, num_steps, use_top_k,
-                      stochastic):
+                      top_k, seed, counter, eos_ids, num_steps, use_top_k,
+                      stochastic, use_eos):
             return self.model.decode_horizon_paged(
                 params, pools, token, pos, tables, temperature, top_k,
-                seed, counter, cfg, num_steps=num_steps,
+                seed, counter, eos_ids, cfg, num_steps=num_steps,
                 use_top_k=use_top_k, stochastic=stochastic,
-                backend=backend)
+                use_eos=use_eos, backend=backend)
 
         self._prefill = jax.jit(_prefill, donate_argnums=(1,))
         self._decode_h = jax.jit(_decode_h, donate_argnums=(1,),
-                                 static_argnums=(9, 10, 11))
+                                 static_argnums=(10, 11, 12, 13))
         self._copy = jax.jit(copy_pages, donate_argnums=(0,))
 
     def _apply_copies(self, copies: List[Tuple[int, int]]) -> None:
@@ -190,7 +199,12 @@ class PagedEngine:
                 # fresh sequence: sample the first generated token from
                 # the last *real* prompt position's logits. A resumed
                 # sequence already holds its next feed token in out.
-                seq.out.append(seq.sampler(np.asarray(logits[0, real - 1])))
+                tok = seq.sampler(np.asarray(logits[0, real - 1]))
+                # the very first token can already be a finish event
+                # (eos, or a single-token stop sequence): the sequence
+                # must never enter a decode batch.
+                _, seq.finish_reason = apply_finish(seq.sampler, seq.out,
+                                                    [tok])
 
     def _decode_step(self) -> None:
         batch = self.sched.decode_batch(self.decode_batch)
@@ -240,28 +254,58 @@ class PagedEngine:
             sids[i] = seq.seq_id
         tables = jnp.asarray(self.cache.batch_tables(sids))
         # static sampling fast paths: skipping the top-k rank sorts /
-        # Gumbel rows is an exact identity for lanes that don't use
-        # them, so flags from the live batch never change any draw.
+        # Gumbel rows / eos membership tests is an exact identity for
+        # lanes that don't use them, so flags from the live batch never
+        # change any draw. The eos table width is pow2-rounded so lane
+        # mixes compile a handful of shapes, not one per mix.
         use_top_k = any(s.sampler.top_k > 0 for s in lanes)
         stochastic = any(s.sampler.temperature > 0 for s in lanes)
-        toks, pools = self._decode_h(
+        widest = max(len(s.sampler.eos_ids) for s in lanes)
+        use_eos = widest > 0
+        eos = np.full((d, 1), -1, np.int32)
+        if use_eos:
+            width = 1 << (widest - 1).bit_length() if widest > 1 else 1
+            eos = np.full((d, width), -1, np.int32)
+            eos[:len(lanes)] = eos_table([s.sampler for s in lanes], width)
+        toks, done, pools = self._decode_h(
             self.params, self.cache.pools, jnp.asarray(token),
             jnp.asarray(pos), tables, jnp.asarray(temp), jnp.asarray(topk),
-            jnp.asarray(seed), jnp.asarray(ctr), h, use_top_k, stochastic)
+            jnp.asarray(seed), jnp.asarray(ctr), jnp.asarray(eos), h,
+            use_top_k, stochastic, use_eos)
         self.cache.pools = pools
         rows = np.asarray(toks)
+        done_rows = np.asarray(done)
         for i, seq in enumerate(lanes):
-            seq.out.extend(int(t) for t in rows[i])
-            seq.sampler.skip(h)          # host stream stays aligned
-            # the horizon wrote the fed tokens' KV at pos[i]..pos[i]+h-1:
-            # prefilled tracks written KV so replay stays in sync.
-            seq.prefilled = int(pos[i]) + h
-            self.decode_tokens += h
+            # post-truncation: cut the lane at its first finish event —
+            # the device-computed eos mask, or a host-matched stop
+            # sequence (which may span the horizon boundary). Draws
+            # after the cut never entered the stream, so the host
+            # counter advances by the kept count only.
+            kept, reason = apply_finish(seq.sampler, seq.out, rows[i],
+                                        eos_row=done_rows[i])
+            seq.sampler.skip(kept)       # host stream stays aligned
+            # the horizon wrote the fed tokens' KV at pos[i]..pos[i]+h-1,
+            # but only the first `kept` positions hold tokens the
+            # sequence keeps: prefilled tracks *valid* written KV.
+            seq.prefilled = int(pos[i]) + kept
+            self.decode_tokens += kept
+            self.truncated_tokens += h - kept
+            if reason is not None:
+                seq.finish_reason = reason
+                # reclaim the pre-extended horizon tail the lane will
+                # never write: pages return to the pool mid-step, so
+                # they fund this step's reap/admit instead of idling
+                # until the sequence is released.
+                self.reclaimed_pages += self.cache.truncate(
+                    seq.seq_id, int(pos[i]) + kept)
         self.decode_dispatches += 1
 
     def _reap_done(self) -> None:
         for seq in list(self.sched.running):
             if seq.done:
+                seq.finish_reason = seq.finish_reason or "length"
+                self.finish_reasons[seq.finish_reason] = (
+                    self.finish_reasons.get(seq.finish_reason, 0) + 1)
                 self._finished[seq.seq_id] = seq.out
                 self.sched.finish(seq)
 
@@ -282,6 +326,25 @@ class PagedEngine:
 
     # -- public API -----------------------------------------------------------
 
+    def submit(self, request: Request) -> Sequence:
+        """Validate and queue one request; returns the live Sequence
+        handle (the async loop streams from it and cancels through
+        it). ``Scheduler.submit`` is the single validation site."""
+        return self.sched.submit(
+            request.prompt, request.max_new_tokens,
+            sampler=sampler_for(request, self.cfg.vocab_size))
+
+    def cancel(self, seq: Sequence) -> bool:
+        """Cancel a submitted sequence — a finish event like any other:
+        counted in ``stats()["finish_reasons"]``, pages released by the
+        scheduler (running lanes reaped mid-trace, waiting ones just
+        leave the queue). False if the sequence already finished."""
+        if not self.sched.cancel(seq):
+            return False
+        self.finish_reasons["cancelled"] = (
+            self.finish_reasons.get("cancelled", 0) + 1)
+        return True
+
     def generate(self, requests: List[Request]) -> List[List[int]]:
         """Serve all requests to completion; outputs in request order."""
         # submit() is the single validation site; on failure, name the
@@ -290,9 +353,7 @@ class PagedEngine:
         order: List[int] = []
         for i, r in enumerate(requests):
             try:
-                order.append(self.sched.submit(
-                    r.prompt, r.max_new_tokens,
-                    sampler=sampler_for(r, self.cfg.vocab_size)))
+                order.append(self.submit(r).seq_id)
             except ValueError as e:
                 self.sched.abandon(order)
                 raise ValueError(f"request {i}: {e}") from None
@@ -323,11 +384,15 @@ class PagedEngine:
             "utilization": round(c.utilization(), 4),
             "admitted": s.admitted,
             "finished": s.finished,
+            "cancelled": s.cancelled,
+            "finish_reasons": dict(self.finish_reasons),
             "steps": self.steps,
             "decode_tokens": self.decode_tokens,
             "decode_dispatches": self.decode_dispatches,
             "tokens_per_dispatch": round(
                 self.decode_tokens / max(self.decode_dispatches, 1), 3),
+            "truncated_tokens": self.truncated_tokens,
+            "reclaimed_pages": self.reclaimed_pages,
         }
 
     def reset_stats(self) -> None:
@@ -336,9 +401,13 @@ class PagedEngine:
         self.sched.preemptions = 0
         self.sched.admitted = 0
         self.sched.finished = 0
+        self.sched.cancelled = 0
         self.steps = 0
         self.decode_tokens = 0
         self.decode_dispatches = 0
+        self.truncated_tokens = 0
+        self.reclaimed_pages = 0
+        self.finish_reasons = {}
 
 
 class Engine:
@@ -352,6 +421,9 @@ class Engine:
         self.max_len = max_len
         self.rules = rules
         self.model = api.get_model(cfg)
+        # why each request of the last generate() call stopped,
+        # parallel to its returned outputs
+        self.finish_reasons: List[str] = []
 
         def _decode(params, cache, token, pos):
             return self.model.decode_step(params, cache, token, pos, cfg)
@@ -363,22 +435,42 @@ class Engine:
         self._prefill = jax.jit(_prefill_one)
 
     def generate(self, requests: List[Request]) -> List[List[int]]:
-        """Serve all requests (batched, prompt lengths padded per batch)."""
+        """Serve all requests (batched, prompt lengths padded per batch).
+
+        ``finish_reasons`` (parallel to the returned outputs) records
+        why each request stopped: ``"eos"`` / ``"stop"`` on a finish
+        event, ``"length"`` when the token budget ran out.
+        """
         meshctx, rulectx = _run_ctx(self.rules)
         outs: List[List[int]] = []
+        self.finish_reasons = []
         with meshctx, rulectx:
             for i in range(0, len(requests), self.batch):
                 chunk = requests[i:i + self.batch]
-                outs.extend(self._generate_batch(chunk))
+                res, reasons = self._generate_batch(chunk)
+                outs.extend(res)
+                self.finish_reasons.extend(reasons)
         return outs
 
-    def _generate_batch(self, chunk: List[Request]) -> List[List[int]]:
+    def _generate_batch(self, chunk: List[Request]
+                        ) -> Tuple[List[List[int]], List[str]]:
         """One padded batch. The final ragged chunk of a trace is padded
         up to ``batch_size`` with masked lanes (zero prompt, zero token
         budget) so the batch dimension — and with it the compiled
         prefill/decode shapes — never varies across chunks: one compile
         per prompt length serves the whole trace instead of one per
-        ragged tail (the PR 3 bench-warmup artifact's root cause)."""
+        ragged tail (the PR 3 bench-warmup artifact's root cause).
+
+        Finished lanes — budget met, eos/stop fired, or padding — are
+        **masked**: they feed the constant token 0 and their sampler is
+        never consulted again, so a finished lane cannot perturb batch
+        stats or RNG accounting (each lane's attention and counter-keyed
+        sampling stream are independent of the others, so in exact mode
+        the real lanes' tokens are bit-identical to a run where every
+        lane stays live — pinned by the mixed-length batch test). When
+        every real lane has finished, the decode loop exits early
+        instead of burning steps feeding masked lanes.
+        """
         real = len(chunk)
         pad = Request(prompt=np.zeros(1, np.int32), max_new_tokens=0)
         chunk = chunk + [pad] * (self.batch - real)
@@ -390,26 +482,35 @@ class Engine:
             toks[j, plen - len(r.prompt):] = r.prompt  # left-pad
         logits, cache = self._prefill(self.params, jnp.asarray(toks))
         rows = np.asarray(logits[:, -1])
-        results = [[samplers[j](rows[j])] if j < real else []
-                   for j in range(b)]
-        token = jnp.asarray(np.array([r[-1] if r else 0 for r in results],
-                                     np.int32))
+        results: List[List[int]] = [[] for _ in range(b)]
+        reasons: List[Optional[str]] = [None] * b
+        for j in range(b):
+            if j < real:
+                _, reasons[j] = apply_finish(samplers[j], results[j],
+                                             [samplers[j](rows[j])])
+
+        def live(j: int) -> bool:
+            return (j < real and reasons[j] is None
+                    and len(results[j]) < chunk[j].max_new_tokens)
+
+        token = jnp.asarray(np.array(
+            [results[j][-1] if live(j) else 0 for j in range(b)], np.int32))
         max_new = max(r.max_new_tokens for r in chunk)
         pos = plen
         for _ in range(max_new - 1):
+            if not any(live(j) for j in range(b)):
+                break                    # early exit: all lanes finished
             logits, cache = self._decode(self.params, cache, token,
                                          jnp.asarray(pos, jnp.int32))
             rows = np.asarray(logits)
             nxt = np.zeros((b,), np.int32)
             for j in range(b):
-                if len(results[j]) < chunk[j].max_new_tokens:
-                    results[j].append(samplers[j](rows[j]))
-                    nxt[j] = results[j][-1]
-                else:
-                    # finished or padding lane: keep feeding greedy
-                    # continuations so its KV stream stays deterministic
-                    # for others.
-                    nxt[j] = int(np.argmax(rows[j]))
+                if live(j):
+                    _, reasons[j] = apply_finish(
+                        samplers[j], results[j], [samplers[j](rows[j])])
+                    if live(j):
+                        nxt[j] = results[j][-1]
             token = jnp.asarray(nxt)
             pos += 1
-        return results[:real]
+        return (results[:real],
+                [r or "length" for r in reasons[:real]])

@@ -343,6 +343,38 @@ class PagedKVCache:
                                       self.blocks_in_use)
         return copies
 
+    def truncate(self, seq_id: int, num_tokens: int) -> int:
+        """Shrink ``seq_id``'s table to cover ``num_tokens`` tokens,
+        dropping the reference on every tail page.
+
+        This is the reclaim path for **early exit**: a decode horizon
+        pre-extends the table for all H tokens, so a lane that hits an
+        eos/stop event at token k < H holds ``blocks(H) - blocks(k)``
+        pages it will never use — post-truncation hands them back
+        before the sequence is even reaped, so they fund the same
+        step's admissions. Refcount-correct under COW/prefix sharing:
+        each dropped page is dereferenced exactly like :meth:`release`
+        does (shared pages just lose one ref; refcount-0 registered
+        pages stay resident on the evictable LRU; private unregistered
+        pages return to the free list). Returns the number of pages
+        dropped from the table.
+        """
+        table = self._tables[seq_id]
+        keep = self.blocks_for_tokens(num_tokens)
+        dropped = 0
+        while len(table) > keep:
+            pid = table.pop()
+            self._ref[pid] -= 1
+            assert self._ref[pid] >= 0, f"negative refcount on page {pid}"
+            if self._ref[pid] == 0:
+                h = self._registered.get(pid)
+                if h is not None:
+                    self._evictable[pid] = h      # MRU end
+                else:
+                    self._free.append(pid)
+            dropped += 1
+        return dropped
+
     def release(self, seq_id: int) -> None:
         """Drop ``seq_id``'s references (finish or preemption). Pages
         reaching refcount 0 go back to the free list — unless they are
@@ -395,12 +427,19 @@ def slots_for_positions(positions: Array, block_size: int,
                         tables: Array):
     """Map absolute positions (B, C) + tables (B, NB) -> (block_ids, offsets).
 
-    Positions are clamped into the table so padded/inactive lanes resolve
-    to a real entry (their table rows are all null page 0 anyway).
+    Out-of-range positions (``>= NB * block_size``, or negative) route
+    **explicitly to the null page 0** rather than being clamped into the
+    last table entry: a live page sitting in a table's final row must
+    never absorb an over-range write, regardless of what the caller put
+    there. In-range positions of padded/inactive lanes still resolve
+    through their (all-null) table rows as before.
     """
     nb = tables.shape[1]
-    blk_idx = jnp.clip(positions // block_size, 0, nb - 1)
-    block_ids = jnp.take_along_axis(tables, blk_idx, axis=1)
+    blk_idx = positions // block_size
+    in_range = (blk_idx >= 0) & (blk_idx < nb)
+    block_ids = jnp.take_along_axis(tables, jnp.clip(blk_idx, 0, nb - 1),
+                                    axis=1)
+    block_ids = jnp.where(in_range, block_ids, 0)
     offsets = positions % block_size
     return block_ids, offsets
 

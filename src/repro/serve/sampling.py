@@ -32,8 +32,29 @@ Two implementations share that contract:
 * :class:`Sampler` — the host-side per-row oracle (numpy math, the
   same threefry bits). The engines use it for the prefill-logits first
   token and tests use it to pin the device path.
+
+**Finish events.** A request may also carry ``eos_ids`` (single tokens
+that terminate generation the moment they are sampled) and ``stop``
+(multi-token stop sequences, matched over the *generated* tokens only).
+The finish contract lives here alongside the draw contract because the
+two must stay aligned under decode horizons: the device scan keeps
+sampling past a stop (it cannot exit early without breaking the static
+scan shape), so the tokens after the first finish event are **wasted
+draws that never entered the stream** — post-truncation discards them
+and the host counter advances only by the kept count, keeping the
+"token ``n`` draws with key ``(seed, n)``" invariant intact.
+
+* :func:`eos_hits` — the eos membership test, one definition for both
+  homes: jnp arrays in the fused decode-horizon scan (the per-lane done
+  mask ``decode_horizon_paged`` returns), numpy on the host oracle.
+* :func:`apply_finish` — the host-side post-truncation: append a row of
+  sampled tokens to a sequence's output, cut at the earliest finish
+  event (eos token, or a completed stop sequence — including one that
+  *spans* a horizon boundary), and report the finish reason.
 """
 from __future__ import annotations
+
+from typing import List, Optional, Sequence as Seq, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -91,16 +112,74 @@ def sample_tokens(logits: Array, temperature: Array, top_k: Array,
     return out.astype(jnp.int32)
 
 
+def eos_hits(tokens, eos_ids):
+    """Membership mask of ``tokens`` in a ``-1``-padded eos table.
+
+    tokens ``(B,)`` (or any shape) int32; eos_ids ``(E,)`` or ``(B, E)``
+    int32, padded with ``-1`` (never a valid token id). Returns a bool
+    mask of ``tokens``' shape. Pure elementwise math, so the same
+    definition runs in-jit inside the decode-horizon scan (the per-lane
+    done mask) and on the host oracle (numpy inputs) — bit-identical.
+    """
+    xp = jnp if isinstance(tokens, jax.Array) else np
+    eos_ids = xp.asarray(eos_ids)
+    toks = xp.asarray(tokens)[..., None]
+    return xp.any((toks == eos_ids) & (eos_ids >= 0), axis=-1)
+
+
+def apply_finish(sampler: "Sampler", out: List[int], new_tokens: Seq[int],
+                 eos_row: Optional[Seq[bool]] = None,
+                 ) -> Tuple[int, Optional[str]]:
+    """Host-side post-truncation: extend ``out`` with ``new_tokens``,
+    cutting at the earliest finish event.
+
+    The finishing token (the eos id, or the last token of a completed
+    stop sequence) is **kept** in ``out``; everything sampled after it
+    inside the same horizon is discarded — those draws never entered
+    the PRNG stream, so the caller must advance the host counter by the
+    *kept* count only. ``eos_row`` is the per-token eos mask when the
+    device already computed it (``decode_horizon_paged``'s done mask);
+    without it the membership test runs here — same definition, same
+    cut. Stop sequences are matched over generated tokens alone and may
+    span a horizon boundary (the match window reaches back
+    ``len(stop) - 1`` tokens into the previously kept output). Returns
+    ``(kept, reason)`` with ``reason`` in ``{"eos", "stop", None}``;
+    when both events land on the same final token, ``eos`` wins (the
+    stop would only re-confirm the cut).
+    """
+    prev = len(out)
+    kept = len(new_tokens)
+    reason: Optional[str] = None
+    if eos_row is None:
+        eos_row = [sampler.is_eos(t) for t in new_tokens]
+    for i in range(len(new_tokens)):
+        if eos_row[i]:
+            kept, reason = i + 1, "eos"
+            break
+    out.extend(int(t) for t in new_tokens[:kept])
+    cut = sampler.find_stop(out, prev)
+    if cut is not None and (cut < len(out) or reason is None):
+        del out[cut:]
+        kept, reason = cut - prev, "stop"
+    return kept, reason
+
+
 class Sampler:
     """Host-side per-sequence oracle of the device sampling contract.
 
     Stateful counter: call ``n`` uses threefry key ``(seed, n)`` — the
     same key :func:`sample_tokens` uses for ``counter == n``, so host
     and device draws agree bit-for-bit on equal logits rows.
+
+    Also carries the request's finish events: ``eos_ids`` (single
+    terminating tokens — the device mirror is :func:`eos_hits`) and
+    ``stop`` (multi-token sequences, host-checked by
+    :meth:`find_stop` / :func:`apply_finish`).
     """
 
     def __init__(self, temperature: float = 0.0, top_k: int = 0,
-                 seed: int = 0, vocab_size: int = 0):
+                 seed: int = 0, vocab_size: int = 0,
+                 eos_ids: Seq[int] = (), stop: Seq[Seq[int]] = ()):
         if temperature < 0:
             raise ValueError(f"temperature must be >= 0, got {temperature}")
         if top_k < 0:
@@ -111,6 +190,8 @@ class Sampler:
         # the host oracle keys the same threefry stream for any input.
         self.seed = int(seed) & 0xFFFFFFFF
         self.vocab_size = int(vocab_size)
+        self.eos_ids = frozenset(int(t) for t in eos_ids)
+        self.stop = tuple(tuple(int(t) for t in s) for s in stop if len(s))
         self._n = 0                     # tokens sampled so far
 
     @property
@@ -126,6 +207,26 @@ class Sampler:
         """Advance the stream past ``n`` draws taken elsewhere (the
         engine's in-jit horizon sampler shares this stream)."""
         self._n += n
+
+    def is_eos(self, token: int) -> bool:
+        return int(token) in self.eos_ids
+
+    def find_stop(self, out: Seq[int], prev_len: int) -> Optional[int]:
+        """Earliest end of a completed stop sequence in the newly
+        generated region of ``out`` (tokens at index >= ``prev_len``),
+        with the match window reaching back into the previous tokens so
+        a stop spanning a horizon boundary is found. Returns the kept
+        output length (index just past the stop), or None."""
+        if not self.stop:
+            return None
+        best: Optional[int] = None
+        for end in range(prev_len + 1, len(out) + 1):
+            for s in self.stop:
+                if end >= len(s) and tuple(out[end - len(s):end]) == s:
+                    best = end if best is None else min(best, end)
+            if best is not None:
+                break                   # earliest end wins
+        return best
 
     def __call__(self, logits: np.ndarray) -> int:
         """One token id from a (padded_vocab,) logits row."""
@@ -146,9 +247,24 @@ class Sampler:
         return int(np.argmax(y + g))
 
 
+def eos_table(samplers: Seq["Sampler"], width: int = 0) -> np.ndarray:
+    """(len(samplers), E) int32 eos-id table, padded with ``-1`` — the
+    device-side form :func:`eos_hits` consumes. ``width`` pins E (for a
+    static batch shape); otherwise E is the widest lane (min 1)."""
+    e = max([width, 1] + [len(s.eos_ids) for s in samplers])
+    table = np.full((len(samplers), e), -1, np.int32)
+    for i, s in enumerate(samplers):
+        for j, tok in enumerate(sorted(s.eos_ids)):
+            table[i, j] = tok
+    return table
+
+
 def sampler_for(request, vocab_size: int = 0) -> Sampler:
-    """Sampler from a serve Request's (temperature, top_k, seed)."""
+    """Sampler from a serve Request's (temperature, top_k, seed,
+    eos_ids, stop)."""
     return Sampler(temperature=getattr(request, "temperature", 0.0),
                    top_k=getattr(request, "top_k", 0),
                    seed=getattr(request, "seed", 0),
-                   vocab_size=vocab_size)
+                   vocab_size=vocab_size,
+                   eos_ids=getattr(request, "eos_ids", ()),
+                   stop=getattr(request, "stop", ()))

@@ -42,6 +42,10 @@ class Sequence:                        # tracked in running/waiting by object
     prefilled: int = 0                 # replay tokens already written
     out: List[int] = dataclasses.field(default_factory=list)
     restarts: int = 0                  # recompute-preemption count
+    # why the sequence stopped: "eos" | "stop" | "cancelled" set the
+    # moment the event fires (making `done` true regardless of budget);
+    # "length" is stamped at reap time for budget-exhausted sequences.
+    finish_reason: Optional[str] = None
     # cache.prefix_keys(prompt), computed once at first admission try so
     # a long prompt stuck at the queue head isn't re-hashed every step.
     prefix_keys: Optional[List[Tuple[int, bytes]]] = None
@@ -78,8 +82,11 @@ class Sequence:                        # tracked in running/waiting by object
 
     @property
     def done(self) -> bool:
-        return (not self.in_prefill
-                and len(self.out) >= self.max_new_tokens)
+        """Finished: a finish event fired (eos / stop / cancellation —
+        terminal even mid-prefill), or the token budget is met."""
+        return (self.finish_reason is not None
+                or (not self.in_prefill
+                    and len(self.out) >= self.max_new_tokens))
 
 
 class Scheduler:
@@ -97,6 +104,7 @@ class Scheduler:
         self.admitted = 0
         self.finished = 0
         self.preemptions = 0
+        self.cancelled = 0
 
     # -- intake ---------------------------------------------------------------
 
@@ -113,12 +121,13 @@ class Scheduler:
                 f"(per-seq/pool limit {limit})")
 
     def submit(self, prompt: np.ndarray, max_new_tokens: int,
-               sampler: Optional[object] = None) -> int:
+               sampler: Optional[object] = None) -> Sequence:
         """Queue a request, failing fast if it can never fit. This is
         the single validation site; ``PagedEngine.generate`` wraps the
         error with the request index and unwinds its earlier
         submissions. Without an explicit sampler the sequence decodes
-        greedily."""
+        greedily. Returns the queued :class:`Sequence` — the live
+        handle the async loop streams from and cancels through."""
         self.check_fits(prompt, max_new_tokens)
         if sampler is None:
             from repro.serve.sampling import Sampler
@@ -127,7 +136,7 @@ class Scheduler:
                        max_new_tokens, sampler=sampler)
         self._next_id += 1
         self.waiting.append(seq)
-        return seq.seq_id
+        return seq
 
     def abandon(self, seq_ids) -> None:
         """Drop still-waiting submissions (generate() unwinds a wave
@@ -210,7 +219,7 @@ class Scheduler:
     def next_prefill(self) -> Optional[Sequence]:
         """Oldest running sequence that still has replay left to write."""
         for seq in self.running:
-            if seq.in_prefill:
+            if seq.in_prefill and not seq.done:
                 return seq
         return None
 
@@ -231,10 +240,16 @@ class Scheduler:
         in between, so it must end no later than the first event that
         needs one:
 
-        * **finish**: no lane may pass its ``max_new_tokens`` budget
-          mid-horizon (its tokens would be wasted draws and its pages
-          would be held past completion), so the horizon is capped at
-          the minimum remaining budget over the batch;
+        * **budget finish**: no lane may pass its ``max_new_tokens``
+          budget mid-horizon (its tokens would be wasted draws and its
+          pages would be held past completion), so the horizon is
+          capped at the minimum remaining budget over the batch.
+          **Eos/stop finishes are deliberately NOT events**: they are
+          data-dependent (invisible until the token is sampled), so the
+          horizon cannot be truncated for them ahead of time — instead
+          the device scan reports a per-lane done mask and the engine
+          post-truncates (discarding the tail draws and reclaiming the
+          pre-extended pages via ``PagedKVCache.truncate``);
         * **prefill pending**: chunked prefill interleaves one chunk per
           engine step; while any running sequence still has replay to
           write, the horizon stays 1 so a long prompt cannot be starved
@@ -263,6 +278,26 @@ class Scheduler:
         self.running.remove(seq)
         self.cache.release(seq.seq_id)
         self.finished += 1
+
+    def cancel(self, seq: Sequence) -> bool:
+        """Cooperative cancellation — a finish event like any other:
+        a running sequence is reaped mid-trace (page refs released, its
+        lane free for the next step's batch), a waiting one just leaves
+        the queue. Returns False if the sequence is not tracked (already
+        finished)."""
+        if seq in self.running:
+            seq.finish_reason = "cancelled"
+            self.running.remove(seq)
+            self.cache.release(seq.seq_id)
+            self.cancelled += 1
+            return True
+        try:
+            self.waiting.remove(seq)
+        except ValueError:
+            return False
+        seq.finish_reason = "cancelled"
+        self.cancelled += 1
+        return True
 
     @property
     def has_work(self) -> bool:

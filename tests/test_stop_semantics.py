@@ -1,0 +1,374 @@
+"""Early-exit correctness: EOS/stop-token semantics across decode
+horizons (device done mask + host post-truncation), over-extended-page
+reclamation, the dense engine's finished-lane masking, and the
+slots_for_positions null-page routing regression."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.models import api
+from repro.serve.engine import Engine, PagedEngine, Request
+from repro.serve.kv_cache import PagedKVCache, slots_for_positions
+from repro.serve.sampling import Sampler, apply_finish, eos_hits, eos_table
+
+
+@pytest.fixture(scope="module")
+def exact_lm():
+    cfg = get_config("qwen2_0_5b").smoke()
+    params, _ = api.init_params(jax.random.PRNGKey(0), cfg)
+    cfg = dataclasses.replace(cfg, softmax_mode="exact", norm_mode="exact",
+                              logit_int8=False)
+    return cfg, params
+
+
+def _paged(cfg, params, **kw):
+    base = dict(num_blocks=40, block_size=8, max_seq_len=64, max_running=4,
+                decode_batch=4, prefill_chunk=8, backend="pallas")
+    base.update(kw)
+    return PagedEngine(cfg, params, **base)
+
+
+def _req(cfg, rng, plen=12, new=8, **kw):
+    return Request(prompt=rng.integers(0, cfg.vocab_size, size=plen)
+                   .astype(np.int32), max_new_tokens=new, **kw)
+
+
+@pytest.fixture(scope="module")
+def solo_oracle(exact_lm):
+    """(request, eos-free greedy continuation) for a single request —
+    solo, so no interleaved prefill pins the horizon and multi-token
+    horizons really run."""
+    cfg, params = exact_lm
+    # seed 1: the greedy continuation's 8 tokens are pairwise distinct,
+    # so "first occurrence of base[k]" is exactly index k and eos/stop
+    # placement in the tests below is positional, not accidental.
+    req = _req(cfg, np.random.default_rng(1))
+    outs = _paged(cfg, params, decode_horizon=8).generate([req])
+    assert len(set(outs[0])) == len(outs[0])
+    return req, outs[0]
+
+
+def _truncated(base, eos_ids):
+    """Host oracle for early exit: the eos-free continuation cut at the
+    first occurrence of any eos id (kept)."""
+    for i, t in enumerate(base):
+        if t in eos_ids:
+            return base[:i + 1]
+    return list(base)
+
+
+# -- eos across decode horizons -----------------------------------------------
+
+
+def test_eos_mid_horizon_parity(exact_lm, solo_oracle):
+    """Acceptance: an eos that fires mid-horizon produces the same
+    truncated output at every decode horizon (h1 == h4 == h8), equal to
+    the eos-free continuation cut at the stop, with the horizon-tail
+    draws discarded and zero leaked pages."""
+    cfg, params = exact_lm
+    req, base = solo_oracle
+    eos = int(base[2])                   # fires inside the first horizon
+    ereq = dataclasses.replace(req, eos_ids=(eos,))
+    want = _truncated(base, {eos})
+    assert len(want) < len(base)         # the stop actually fires early
+    outs = {}
+    for h in (1, 4, 8):
+        eng = _paged(cfg, params, decode_horizon=h)
+        outs[h] = eng.generate([ereq])[0]
+        assert eng.stats()["finish_reasons"] == {"eos": 1}
+        eng.cache.check_refcounts()
+        assert eng.cache.blocks_in_use == 0
+        if h == 8:
+            # budget 8 => first fused horizon is 4 tokens; a stop on
+            # its second token discards the tail draws.
+            assert eng.stats()["truncated_tokens"] > 0
+    assert outs[1] == outs[4] == outs[8] == want
+
+
+def test_eos_on_last_token_of_horizon(exact_lm, solo_oracle):
+    """A stop landing exactly on a horizon's final token truncates
+    nothing but must still finish the sequence that step."""
+    cfg, params = exact_lm
+    req, base = solo_oracle
+    # budget 8 => decode horizons under h=8 are 4 (tokens 1-4), 2, 1;
+    # base[4] is the last token of the first horizon. The fixture must
+    # not contain it earlier or the stop legitimately fires sooner.
+    eos = int(base[4])
+    assert eos not in base[:4], "fixture must stop on the horizon edge"
+    eng = _paged(cfg, params, decode_horizon=8)
+    out = eng.generate([dataclasses.replace(req, eos_ids=(eos,))])[0]
+    assert out == base[:5]
+    st = eng.stats()
+    assert st["finish_reasons"] == {"eos": 1}
+    assert st["truncated_tokens"] == 0   # nothing sampled past the stop
+    eng.cache.check_refcounts()
+
+
+def test_first_token_eos_never_decodes(exact_lm, solo_oracle):
+    """An eos sampled from the prefill logits finishes the request
+    before it ever joins a decode batch."""
+    cfg, params = exact_lm
+    req, base = solo_oracle
+    eng = _paged(cfg, params, decode_horizon=8)
+    out = eng.generate([dataclasses.replace(req, eos_ids=(int(base[0]),))])
+    assert out == [[base[0]]]
+    st = eng.stats()
+    assert st["decode_dispatches"] == 0
+    assert st["finish_reasons"] == {"eos": 1}
+    eng.cache.check_refcounts()
+
+
+def test_eos_parity_with_stochastic_sampling(exact_lm):
+    """The PRNG counter advances by the *kept* count only, so a
+    stochastic stream with eos is horizon-invariant too."""
+    cfg, params = exact_lm
+    rng = np.random.default_rng(11)
+    req = _req(cfg, rng, new=10, temperature=0.9, top_k=8, seed=3)
+    base = _paged(cfg, params, decode_horizon=8).generate([req])[0]
+    eos = int(base[3])
+    ereq = dataclasses.replace(req, eos_ids=(eos,))
+    want = _truncated(base, {eos})
+    assert len(want) < len(base)
+    outs = [_paged(cfg, params, decode_horizon=h).generate([ereq])[0]
+            for h in (1, 8)]
+    assert outs[0] == outs[1] == want
+
+
+def test_stop_sequence_spans_horizon_boundary(exact_lm, solo_oracle):
+    """A two-token stop whose first token is the last token of one
+    horizon and second token the first of the next is still matched
+    (the host window reaches back across the boundary), at every
+    horizon."""
+    cfg, params = exact_lm
+    req, base = solo_oracle
+    stop = (int(base[3]), int(base[4]))
+    # the pair must not occur earlier, or the earlier match (correctly)
+    # wins and the boundary claim is untested.
+    earlier = [tuple(base[i:i + 2]) for i in range(3)]
+    assert stop not in earlier, "fixture pair occurs before the boundary"
+    sreq = dataclasses.replace(req, stop=(stop,))
+    outs = []
+    for h in (1, 2, 8):
+        # h=2: horizons decode tokens (1,2), (3,4), ... wait — budget 8
+        # gives horizons 2,2,2,1; the pair (base[3], base[4]) spans the
+        # second/third horizon boundary.
+        eng = _paged(cfg, params, decode_horizon=h)
+        outs.append(eng.generate([sreq])[0])
+        assert eng.stats()["finish_reasons"] == {"stop": 1}
+        eng.cache.check_refcounts()
+    assert outs[0] == outs[1] == outs[2] == base[:5]
+
+
+def test_earliest_stop_match_wins(exact_lm):
+    """apply_finish cuts at the earliest completed stop, not the first
+    one listed."""
+    s = Sampler(stop=((5, 6), (3,)))
+    out = [1, 2]
+    kept, reason = apply_finish(s, out, [3, 5, 6, 9])
+    assert (out, kept, reason) == ([1, 2, 3], 1, "stop")
+    # eos wins over a stop completing on the same final token
+    s2 = Sampler(eos_ids=(4,), stop=((2, 4),))
+    out2 = [2]
+    kept2, reason2 = apply_finish(s2, out2, [4, 7])
+    assert (out2, kept2, reason2) == ([2, 4], 1, "eos")
+    # ... but an *earlier* stop beats a later eos
+    s3 = Sampler(eos_ids=(9,), stop=((1,),))
+    out3 = []
+    kept3, reason3 = apply_finish(s3, out3, [1, 9])
+    assert (out3, kept3, reason3) == ([1], 1, "stop")
+
+
+def test_cow_forked_prefix_stops_differently(exact_lm):
+    """Two requests sharing a cached prompt prefix (COW fork) may stop
+    at different steps per branch; each branch's output is the shared
+    greedy stream cut at its own eos, refcount-clean throughout."""
+    cfg, params = exact_lm
+    rng = np.random.default_rng(33)
+    shared = rng.integers(0, cfg.vocab_size, size=20).astype(np.int32)
+    base_reqs = [Request(prompt=shared, max_new_tokens=6)] * 2
+    eng = _paged(cfg, params, decode_horizon=8)
+    base = eng.generate(base_reqs)       # also populates the prefix index
+    assert base[0] == base[1]            # greedy twins
+    eos_a, eos_b = int(base[0][1]), int(base[0][4])
+    forked = [Request(prompt=shared, max_new_tokens=6, eos_ids=(eos_a,)),
+              Request(prompt=shared, max_new_tokens=6, eos_ids=(eos_b,))]
+    outs = eng.generate(forked)          # both hit the cache and fork
+    assert outs[0] == _truncated(base[0], {eos_a})
+    assert outs[1] == _truncated(base[0], {eos_b})
+    assert len(outs[0]) < len(outs[1])   # branches stopped at different steps
+    st = eng.stats()
+    assert st["cow_copies"] > 0
+    assert st["prefix_hit_rate"] > 0
+    eng.cache.check_refcounts()
+    assert eng.cache.blocks_in_use == 0
+
+
+def test_horizon_tail_pages_reclaimed(exact_lm):
+    """A tiny block size makes the pre-extended horizon tail span whole
+    pages: an early stop must hand them back (truncate), not hold them
+    until release."""
+    cfg, params = exact_lm
+    rng = np.random.default_rng(6)       # continuation: first 8 distinct
+    req = _req(cfg, rng, plen=8, new=16)
+    base = _paged(cfg, params, block_size=2, prefill_chunk=8,
+                  decode_horizon=8).generate([req])[0]
+    assert len(set(base[:8])) == 8, "fixture needs a mid-horizon stop"
+    eos = int(base[2])
+    eng = _paged(cfg, params, block_size=2, prefill_chunk=8,
+                 decode_horizon=8)
+    out = eng.generate([dataclasses.replace(req, eos_ids=(eos,))])[0]
+    assert out == _truncated(base, {eos})
+    st = eng.stats()
+    assert st["truncated_tokens"] > 0
+    assert st["reclaimed_pages"] > 0
+    eng.cache.check_refcounts()
+    assert eng.cache.blocks_in_use == 0
+
+
+# -- host/device eos agreement ------------------------------------------------
+
+
+def test_host_device_eos_agreement():
+    """eos_hits (the device done-mask math) agrees with the host
+    Sampler's membership test across a random grid, through the padded
+    eos_table the engine ships to the device."""
+    rng = np.random.default_rng(0)
+    samplers = [Sampler(eos_ids=ids) for ids in
+                ((), (3,), (7, 11), (0, 5, 9))]
+    table = eos_table(samplers)
+    assert table.shape == (4, 3)
+    toks = rng.integers(0, 16, size=(4, 64)).astype(np.int32)
+    host = np.array([[s.is_eos(t) for t in row]
+                     for s, row in zip(samplers, toks)])
+    np_mask = np.stack([eos_hits(toks[:, j], table)
+                        for j in range(toks.shape[1])], axis=1)
+    dev_mask = np.stack([np.asarray(jax.jit(eos_hits)(
+        jnp.asarray(toks[:, j]), jnp.asarray(table)))
+        for j in range(toks.shape[1])], axis=1)
+    assert (np_mask == host).all()
+    assert (dev_mask == host).all()
+    # -1 padding can never match a real token id
+    assert not eos_hits(np.arange(16, dtype=np.int32),
+                        np.full((16, 2), -1, np.int32)).any()
+
+
+def test_device_done_mask_matches_host_truncation(exact_lm, solo_oracle):
+    """Engine-level agreement: outputs of a device-masked eos run equal
+    the pure-host oracle (the dense engine, whose eos path is entirely
+    host-side apply_finish)."""
+    cfg, params = exact_lm
+    req, base = solo_oracle
+    ereq = dataclasses.replace(req, eos_ids=(int(base[3]),))
+    paged = _paged(cfg, params, decode_horizon=8).generate([ereq])
+    dense = Engine(cfg, params, batch_size=1, max_len=32).generate([ereq])
+    assert paged == dense == [_truncated(base, set(ereq.eos_ids))]
+
+
+# -- dense engine finished-lane masking ---------------------------------------
+
+
+def test_dense_masks_finished_lanes_mixed_batch(exact_lm):
+    """A mixed-length batch (different budgets + an eos lane) returns
+    exactly what each request produces alone: finished lanes are masked
+    and cannot perturb live ones, and the loop early-exits instead of
+    decoding to the longest budget."""
+    cfg, params = exact_lm
+    rng = np.random.default_rng(7)
+    probe = _req(cfg, rng, new=8)
+    base = Engine(cfg, params, batch_size=1, max_len=32).generate([probe])[0]
+    reqs = [dataclasses.replace(probe, max_new_tokens=3),
+            dataclasses.replace(probe, eos_ids=(int(base[4]),)),
+            _req(cfg, rng, new=8),
+            _req(cfg, rng, new=1)]
+    eng = Engine(cfg, params, batch_size=4, max_len=32)
+    batched = eng.generate(reqs)
+    assert eng.finish_reasons == ["length", "eos", "length", "length"]
+    alone = [Engine(cfg, params, batch_size=1,
+                    max_len=32).generate([r])[0] for r in reqs]
+    assert batched == alone
+    assert batched[0] == base[:3]
+    assert batched[1] == _truncated(base, {int(base[4])})
+
+
+def test_dense_all_finished_early_exit(exact_lm):
+    """When every lane stops early the decode loop must too — the
+    finish events bound work, not the max budget (deterministic:
+    counted in decode dispatches)."""
+    cfg, params = exact_lm
+    rng = np.random.default_rng(9)
+    probe = _req(cfg, rng, new=24)
+    base = Engine(cfg, params, batch_size=1, max_len=48).generate(
+        [dataclasses.replace(probe, max_new_tokens=4)])[0]
+    eng = Engine(cfg, params, batch_size=2, max_len=48)
+    calls = {"n": 0}
+    orig = eng._decode
+
+    def counting(*a, **k):
+        calls["n"] += 1
+        return orig(*a, **k)
+
+    eng._decode = counting
+    outs = eng.generate([dataclasses.replace(probe, eos_ids=(int(base[1]),)),
+                         dataclasses.replace(probe, eos_ids=(int(base[1]),))])
+    assert all(o == base[:2] for o in outs)
+    assert eng.finish_reasons == ["eos", "eos"]
+    # one decode produced token 2 (the eos); the loop must then exit
+    # instead of burning the remaining 22 budgeted steps.
+    assert calls["n"] == 1
+    eng._decode = orig
+    assert len(eng.generate([probe])[0]) == 24  # budget runs are intact
+
+
+# -- kv-cache units -----------------------------------------------------------
+
+
+def test_truncate_refcount_correct_under_sharing(exact_lm):
+    """PagedKVCache.truncate drops tail refs exactly like release():
+    shared pages lose one ref and stay; refcount-0 registered pages go
+    evictable; private pages go back to the free list."""
+    cfg, _ = exact_lm
+    cache = PagedKVCache(cfg, num_blocks=12, block_size=4, max_seq_len=40)
+    prompt = np.arange(8, dtype=np.int32)
+    cache.attach(0, [])
+    assert cache.append_tokens(0, 0, 8) == []       # 2 prompt pages
+    cache.register_prompt(0, prompt)
+    pages = list(cache._tables[0])
+    cache.attach(1, pages)                           # share them (ref 2)
+    assert cache.append_tokens(1, 8, 20) == []       # + 3 private pages
+    cache.check_refcounts()
+    free_before = cache.free_blocks
+    # early exit at token 10: keep 3 pages, hand back 2 private ones
+    assert cache.truncate(1, 10) == 2
+    cache.check_refcounts()
+    assert cache.free_blocks == free_before + 2
+    assert [cache._ref[p] for p in pages] == [2, 2]  # shared refs intact
+    # truncate to zero drops the shared refs too — pages survive as
+    # registered/attached elsewhere, never double-freed
+    assert cache.truncate(1, 0) == 3
+    cache.check_refcounts()
+    assert [cache._ref[p] for p in pages] == [1, 1]
+    cache.release(0)                                 # registered -> evictable
+    cache.check_refcounts()
+    assert cache.cached_blocks == 2
+    cache.release(1)
+    cache.check_refcounts()
+    assert cache.blocks_in_use == 0
+
+
+def test_slots_for_positions_routes_over_range_to_null_page():
+    """Regression: an out-of-range position must resolve to the null
+    page 0, never alias whatever live page sits in the table's last
+    row."""
+    tables = jnp.asarray([[3, 7]], jnp.int32)        # page 7 is live
+    positions = jnp.asarray([[0, 5, 7, 8, 11, -1]], jnp.int32)
+    block_ids, offsets = slots_for_positions(positions, 4, tables)
+    assert block_ids.tolist() == [[3, 7, 7, 0, 0, 0]]
+    assert offsets.tolist()[0][:4] == [0, 1, 3, 0]
+    # in-range behavior of null-padded lanes is unchanged
+    null_ids, _ = slots_for_positions(positions,
+                                      4, jnp.zeros((1, 2), jnp.int32))
+    assert null_ids.tolist() == [[0] * 6]
