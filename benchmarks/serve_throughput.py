@@ -27,7 +27,17 @@ Poisson traces (inter-arrival times measured in engine steps):
                      with eos ignored — the pre-fix behavior — with
                      exact-mode token parity for the pre-stop tokens,
                      zero leaked pages, and p50/p99 TTFT+ITL recorded
-                     from the streaming loop's latency accounting).
+                     from the streaming loop's latency accounting);
+  * tenant trace    — N distinct system prompts round-robin, replayed
+                     through the replicated front door (this PR's
+                     claim: crc32 prefix-affinity routing spreads
+                     tenants across replicas while co-locating each
+                     tenant's requests on one prefix cache; aggregate
+                     tok/s recorded for 1 and 2 replicas with identical
+                     outputs). Per-mesh-shape tok/s rows additionally
+                     run sharded engines in XLA_FLAGS subprocesses
+                     (1x1 / 1x2 / 2x2) with a bitwise cross-shape
+                     output digest in exact modes.
 
 Reported per engine: tok/s (CPU interpret mode: magnitudes are
 relative, not TPU numbers), cache_tokens (HBM committed up front),
@@ -48,6 +58,8 @@ import argparse
 import dataclasses
 import json
 import os
+import subprocess
+import sys
 import time
 
 import jax
@@ -56,7 +68,7 @@ import numpy as np
 from repro.configs.base import get_config
 from repro.models import api
 from repro.serve.engine import Engine, PagedEngine, Request
-from repro.serve.loop import AsyncEngine
+from repro.serve.loop import AsyncEngine, ReplicatedAsyncEngine
 
 ARCH = "qwen2_0_5b"
 BENCH_PATH = os.path.join(os.path.dirname(__file__), "BENCH_serve.json")
@@ -81,6 +93,23 @@ def make_shared_trace(cfg, n_requests, rng, rate=0.8, system_len=32,
                 [system, rng.integers(0, cfg.vocab_size, size=tail_len)
                  .astype(np.int32)]), max_new_tokens=new_tokens)
             for _ in range(n_requests)]
+    return list(zip(arrivals.tolist(), reqs))
+
+
+def make_multi_tenant_trace(cfg, n_requests, rng, n_tenants=4, rate=0.8,
+                            system_len=32, tail_len=8, new_tokens=8):
+    """Poisson trace over ``n_tenants`` distinct system prompts (round-
+    robin) — the workload the replicated front door's prefix-affinity
+    router is built for: each tenant's requests co-locate on one
+    replica's prefix cache while tenants spread across replicas."""
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, n_requests)).astype(int)
+    systems = [rng.integers(0, cfg.vocab_size, size=system_len)
+               .astype(np.int32) for _ in range(n_tenants)]
+    reqs = [Request(prompt=np.concatenate(
+                [systems[i % n_tenants],
+                 rng.integers(0, cfg.vocab_size, size=tail_len)
+                 .astype(np.int32)]), max_new_tokens=new_tokens)
+            for i in range(n_requests)]
     return list(zip(arrivals.tolist(), reqs))
 
 
@@ -219,6 +248,133 @@ def run_async(cfg, params, trace, *, num_blocks=48, block_size=8,
     }
 
 
+def run_replicated(cfg, params, trace, *, n_replicas, num_blocks=25,
+                   block_size=8, max_seq_len=64, backend="pallas",
+                   decode_horizon=8):
+    """Open-loop run through ``ReplicatedAsyncEngine``: N independent
+    paged replicas (own pool / scheduler / prefix cache) over one
+    shared param tree, requests routed by first-block prefix affinity.
+    ``agg_tok_s`` counts every token across replicas against a single
+    wall clock — the aggregate-throughput number a deployment would
+    quote. The aggregate ``tokens_per_dispatch`` is deterministic
+    (routing is a crc32 of the prompt, the trace clock is engine
+    steps), so it is safe for the regression guard on noisy runners."""
+    engines = []
+    for _ in range(n_replicas):
+        eng = PagedEngine(cfg, params, num_blocks=num_blocks,
+                          block_size=block_size, max_seq_len=max_seq_len,
+                          max_running=6, decode_batch=6, prefill_chunk=8,
+                          decode_horizon=decode_horizon, backend=backend)
+        warm = Request(prompt=np.full((9,), cfg.vocab_size - 1, np.int32),
+                       max_new_tokens=2 * decode_horizon)
+        eng.generate([warm])
+        eng.reset_stats()
+        engines.append(eng)
+    rep = ReplicatedAsyncEngine(engines)
+    t0 = time.perf_counter()
+    handles = [rep.add_request(r, arrival=int(t)) for t, r in trace]
+    rep.run()
+    dt = time.perf_counter() - t0
+    outs = [h.tokens for h in handles]
+    ntok = sum(len(o) for o in outs)
+    for eng in engines:
+        eng.cache.check_refcounts()
+        assert eng.cache.blocks_in_use == 0, "leaked pages after the trace"
+    st = rep.stats()
+    per = st["per_replica"]
+    dispatches = sum(s["engine"]["decode_dispatches"] for s in per)
+    return outs, {
+        "engine": f"paged[{backend}]+dp{n_replicas}",
+        "replicas": n_replicas,
+        "agg_tok_s": round(ntok / dt, 2),
+        "tokens": ntok,
+        "wall_s": round(dt, 2),
+        "tokens_per_dispatch": round(
+            st["decode_tokens"] / max(dispatches, 1), 3),
+        "routed_by_prefix": st["routed_by_prefix"],
+        "routed_by_load": st["routed_by_load"],
+        "completed_per_replica": [s["completed"] for s in per],
+        "prefix_hit_rate_per_replica": [
+            s["engine"]["prefix_hit_rate"] for s in per],
+    }
+
+
+# Per-mesh-shape rows run in subprocesses: the bench process keeps the
+# real single-device view, each child simulates R*C host devices via
+# XLA_FLAGS (same scheme as tests/_mesh_helpers.py) and times a sharded
+# engine over the shared-prefix trace. Exact modes so the cross-shape
+# output digest must match bit for bit — the recorded tok/s rows double
+# as a parity sweep.
+_MESH_SNIPPET = """
+import dataclasses, json, sys, time, zlib
+import numpy as np
+import jax
+from repro.configs.base import get_config
+from repro.launch.mesh import make_rules
+from repro.models import api
+from repro.serve.engine import PagedEngine, Request
+
+shape = tuple(int(x) for x in sys.argv[1].split("x"))
+arch, n_requests, backend = sys.argv[2], int(sys.argv[3]), sys.argv[4]
+cfg = dataclasses.replace(get_config(arch).smoke(), softmax_mode="exact",
+                          norm_mode="exact", logit_int8=False)
+params, axes = api.init_params(jax.random.PRNGKey(0), cfg)
+rules = make_rules(jax.make_mesh(shape, ("data", "model")))
+eng = PagedEngine(cfg, params, num_blocks=25, block_size=8, max_seq_len=64,
+                  max_running=6, decode_batch=6, prefill_chunk=8,
+                  decode_horizon=8, backend=backend, rules=rules,
+                  param_axes=axes)
+eng.generate([Request(prompt=np.full((9,), cfg.vocab_size - 1, np.int32),
+                      max_new_tokens=16)])
+eng.reset_stats()
+rng = np.random.default_rng(1)
+system = rng.integers(0, cfg.vocab_size, size=32).astype(np.int32)
+reqs = [Request(prompt=np.concatenate(
+            [system, rng.integers(0, cfg.vocab_size, size=8)
+             .astype(np.int32)]), max_new_tokens=8)
+        for _ in range(n_requests)]
+t0 = time.perf_counter()
+outs = eng.generate(reqs)
+dt = time.perf_counter() - t0
+eng.cache.check_refcounts()
+flat = np.asarray([t for o in outs for t in o], np.int32)
+print("MESH-RESULT " + json.dumps({
+    "devices": len(jax.devices()),
+    "tok_s": round(sum(len(o) for o in outs) / dt, 2),
+    "tokens": int(flat.size),
+    "wall_s": round(dt, 2),
+    "prefix_hit_rate": eng.stats()["prefix_hit_rate"],
+    "out_digest": zlib.crc32(flat.tobytes()),
+}))
+"""
+
+
+def run_mesh_shapes(shapes, *, n_requests=6, backend="pallas",
+                    timeout=900):
+    """{"RxC": row} tok/s per mesh shape, one subprocess per shape."""
+    rows = {}
+    for r, c in shapes:
+        tag = f"{r}x{c}"
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = \
+            f"--xla_force_host_platform_device_count={r * c}"
+        src = os.path.join(os.path.dirname(__file__), "..", "src")
+        env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+        out = subprocess.run(
+            [sys.executable, "-c", _MESH_SNIPPET, tag, ARCH,
+             str(n_requests), backend],
+            env=env, capture_output=True, text=True, timeout=timeout)
+        if out.returncode != 0:
+            raise RuntimeError(f"mesh bench {tag} failed:\n"
+                               f"{out.stdout}\n{out.stderr[-4000:]}")
+        line = [ln for ln in out.stdout.splitlines()
+                if ln.startswith("MESH-RESULT ")][-1]
+        rows[tag] = {"engine": f"sharded[{backend}]+tp{tag}",
+                     "mesh": tag,
+                     **json.loads(line[len("MESH-RESULT "):])}
+    return rows
+
+
 def with_eos_at_half(trace, base_outs, every=2):
     """Give every ``every``-th request an eos id chosen from its own
     eos-free continuation at ~half its budget, so early exit fires
@@ -272,6 +428,11 @@ def run(quick: bool = False):
           f"tok_s={pfx_on['tok_s']} hit_rate={pfx_on['prefix_hit_rate']}"
     yield f"serve_prefix_cache_off,{1e6 / max(pfx_off['tok_s'], 1e-9):.1f}," \
           f"tok_s={pfx_off['tok_s']}"
+    mt = make_multi_tenant_trace(cfg, max(n - 6, 4), np.random.default_rng(4))
+    _, dp2 = run_replicated(cfg, params, mt, n_replicas=2)
+    yield f"serve_replicas_dp2,{1e6 / max(dp2['agg_tok_s'], 1e-9):.1f}," \
+          f"agg_tok_s={dp2['agg_tok_s']}" \
+          f" routed_by_prefix={dp2['routed_by_prefix']}"
     ecfg = dataclasses.replace(cfg, softmax_mode="exact",
                                norm_mode="exact", logit_int8=False)
     etrace = make_trace(ecfg, max(n - 8, 3), np.random.default_rng(3),
@@ -364,6 +525,31 @@ def main():
             eos_outs == expected_early_exit(etrace, eos_trace, base_outs),
     }
 
+    # data-parallel replicas behind the routed front door: the same
+    # multi-tenant open-loop trace through 1 and 2 replicas. agg_tok_s
+    # is the deployment-facing aggregate; greedy exact-free parity
+    # (dp1 == dp2 outputs) holds because per-sequence compute is
+    # batch-composition-invariant and routing only moves whole
+    # requests between identical engines.
+    mt_trace = make_multi_tenant_trace(cfg, args.requests,
+                                       np.random.default_rng(4))
+    dp1_outs, dp1 = run_replicated(cfg, params, mt_trace, n_replicas=1,
+                                   backend=args.backend)
+    dp2_outs, dp2 = run_replicated(cfg, params, mt_trace, n_replicas=2,
+                                   backend=args.backend)
+    mesh_rows = run_mesh_shapes([(1, 1), (1, 2), (2, 2)],
+                                backend=args.backend)
+    sharded = {
+        "replica_scaling": {
+            "dp1": dp1,
+            "dp2": dp2,
+            "outputs_identical": dp1_outs == dp2_outs,
+        },
+        "mesh_tok_s": mesh_rows,
+        "mesh_digests_identical": len(
+            {row["out_digest"] for row in mesh_rows.values()}) == 1,
+    }
+
     # shared-system-prompt trace, prefix cache on vs off at equal pool
     shared = make_shared_trace(cfg, max(args.requests - 4, 4),
                                np.random.default_rng(1))
@@ -398,6 +584,7 @@ def main():
             "outputs_identical": on_outs == off_outs,
         },
         "early_exit": early_exit,
+        "sharded": sharded,
     }
     print(json.dumps(report, indent=2))
     if args.record:
@@ -441,6 +628,21 @@ def main():
             "the eos trace must actually finish requests by eos"
         assert eos["truncated_tokens"] > 0, \
             "mid-horizon stops must discard horizon-tail draws"
+        # sharded-serving claims: the replicated front door must
+        # reproduce the single-replica outputs token for token, must
+        # actually use both replicas (tenant prefixes spread by the
+        # crc32 router), and the per-mesh-shape sweep must agree bit
+        # for bit across sharding regimes (exact modes in-subprocess).
+        assert sharded["replica_scaling"]["outputs_identical"], \
+            "dp2 outputs must match dp1 on the multi-tenant trace"
+        assert dp2["routed_by_prefix"] == len(mt_trace), \
+            "every multi-tenant prompt must route by prefix affinity"
+        assert all(n > 0 for n in dp2["completed_per_replica"]), \
+            "the multi-tenant trace must exercise both replicas"
+        assert len(sharded["mesh_tok_s"]) >= 2, \
+            "need tok/s for at least two mesh shapes"
+        assert sharded["mesh_digests_identical"], \
+            "sharded outputs must be identical across mesh shapes"
         with open(BENCH_PATH, "w") as f:
             json.dump(report, f, indent=2)
             f.write("\n")

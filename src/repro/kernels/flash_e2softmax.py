@@ -183,8 +183,8 @@ def flash_e2softmax_pallas(q, k, v, *, causal: bool = True,
 # -- paged variants (serve path: KV lives in a block-paged pool) --------------
 
 
-def _paged_kernel(meta_ref, table_ref, q_ref, k_ref, v_ref, o_ref,
-                  m_ref, s_ref, acc_ref, *, causal: bool, sole: bool,
+def _paged_kernel(meta_ref, table_ref, kvmap_ref, q_ref, k_ref, v_ref,
+                  o_ref, m_ref, s_ref, acc_ref, *, causal: bool, sole: bool,
                   exp_bits: int, int8_scale: Optional[float],
                   exact_corr: bool, scale: float, block_size: int,
                   num_blocks: int, kv_scale: Optional[float]):
@@ -195,7 +195,12 @@ def _paged_kernel(meta_ref, table_ref, q_ref, k_ref, v_ref, o_ref,
     one KV page — the pool is never gathered into a contiguous cache.
     ``meta_ref[b] = (q_start, kv_len)``: absolute position of q row 0 and
     the number of valid keys (entries past kv_len are masked; their table
-    slots point at the null page 0).
+    slots point at the null page 0). ``kvmap_ref[h]`` maps q head ``h``
+    to its pool KV head — the GQA grouping used to be the implicit
+    ``h // (H // KV)``, but under tensor parallelism the q heads a shard
+    holds need not start at pool head 0 (sharded Q over a *replicated*
+    KV pool when ``kv_heads`` is not divisible by the model axis), so
+    the map is explicit and scalar-prefetched.
     """
     b, j = pl.program_id(0), pl.program_id(2)
     bq, d = q_ref.shape[2], q_ref.shape[3]
@@ -252,6 +257,7 @@ def _paged_kernel(meta_ref, table_ref, q_ref, k_ref, v_ref, o_ref,
     "causal", "sole", "exp_bits", "int8_scale", "exact_corr", "interpret",
     "kv_scale"))
 def flash_e2softmax_paged(q, k_pool, v_pool, tables, meta, *,
+                          kv_head_map=None,
                           causal: bool = True, sole: bool = True,
                           exp_bits: int = 4,
                           int8_scale: Optional[float] = None,
@@ -270,6 +276,12 @@ def flash_e2softmax_paged(q, k_pool, v_pool, tables, meta, *,
       meta: (B, 2) int32 rows (q_start, kv_len) — absolute position of
         q row 0, and number of valid keys (kv_len includes the chunk
         itself, which the caller writes to the pool before attending).
+      kv_head_map: optional (H,) int32 mapping q head -> pool KV head.
+        Defaults to the contiguous GQA grouping ``h // (H // KV)``.
+        Tensor-parallel callers pass an explicit map when this shard's
+        q heads attend a KV pool slice that does not start at its own
+        head 0 — the replicated-KV fallback for ``kv_heads`` not
+        divisible by the model axis (see models/layers.paged_attend).
 
     Returns (B, H, C, d) float32.
     """
@@ -277,20 +289,23 @@ def flash_e2softmax_paged(q, k_pool, v_pool, tables, meta, *,
     bsz, h, c, d = q.shape
     n, bs, kvh, _ = k_pool.shape
     nb = tables.shape[1]
-    g = h // kvh
+    if kv_head_map is None:
+        kv_head_map = jnp.arange(h, dtype=jnp.int32) // max(h // kvh, 1)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=3,
         grid=(bsz, h, nb),
         in_specs=[
             pl.BlockSpec((1, 1, c, d),
-                         lambda b, hh, j, meta, tbl: (b, hh, 0, 0)),
+                         lambda b, hh, j, meta, tbl, kvm: (b, hh, 0, 0)),
             pl.BlockSpec((1, bs, 1, d),
-                         lambda b, hh, j, meta, tbl: (tbl[b, j], 0, hh // g, 0)),
+                         lambda b, hh, j, meta, tbl, kvm:
+                         (tbl[b, j], 0, kvm[hh], 0)),
             pl.BlockSpec((1, bs, 1, d),
-                         lambda b, hh, j, meta, tbl: (tbl[b, j], 0, hh // g, 0)),
+                         lambda b, hh, j, meta, tbl, kvm:
+                         (tbl[b, j], 0, kvm[hh], 0)),
         ],
         out_specs=pl.BlockSpec((1, 1, c, d),
-                               lambda b, hh, j, meta, tbl: (b, hh, 0, 0)),
+                               lambda b, hh, j, meta, tbl, kvm: (b, hh, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((c,), jnp.float32),
             pltpu.VMEM((c,), jnp.float32),
@@ -306,10 +321,12 @@ def flash_e2softmax_paged(q, k_pool, v_pool, tables, meta, *,
         out_shape=jax.ShapeDtypeStruct((bsz, h, c, d), jnp.float32),
         grid_spec=grid_spec,
         interpret=interpret,
-    )(meta.astype(jnp.int32), tables.astype(jnp.int32), q, k_pool, v_pool)
+    )(meta.astype(jnp.int32), tables.astype(jnp.int32),
+      kv_head_map.astype(jnp.int32), q, k_pool, v_pool)
 
 
 def flash_e2softmax_paged_decode(q, k_pool, v_pool, tables, ctx_lens, *,
+                                 kv_head_map=None,
                                  sole: bool = True, exp_bits: int = 4,
                                  int8_scale: Optional[float] = None,
                                  exact_corr: bool = False,
@@ -326,6 +343,7 @@ def flash_e2softmax_paged_decode(q, k_pool, v_pool, tables, ctx_lens, *,
         [jnp.zeros_like(ctx_lens, jnp.int32), ctx_lens.astype(jnp.int32)], 1)
     out = flash_e2softmax_paged(
         q[:, :, None], k_pool, v_pool, tables, meta, causal=False,
-        sole=sole, exp_bits=exp_bits, int8_scale=int8_scale,
-        exact_corr=exact_corr, interpret=interpret, kv_scale=kv_scale)
+        kv_head_map=kv_head_map, sole=sole, exp_bits=exp_bits,
+        int8_scale=int8_scale, exact_corr=exact_corr, interpret=interpret,
+        kv_scale=kv_scale)
     return out[:, :, 0]

@@ -19,6 +19,13 @@ Open-loop streaming (Poisson arrivals through the AsyncEngine run
 loop, with early exit on --eos-ids and p50/p99 TTFT+ITL reported):
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2_0_5b --smoke \
     --engine paged --open-loop 0.5 --eos-ids 7 --stream
+
+Sharded serving over a mesh (data x model; params laid out per the
+logical-axis rules, paged attention split over the model axis) plus
+data-parallel engine replicas behind one routed front door:
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2_0_5b --smoke \
+    --engine paged --mesh 1,8 --replicas 2 --open-loop 0.5
 """
 from __future__ import annotations
 
@@ -33,7 +40,7 @@ from repro.configs.base import get_config
 from repro.launch.mesh import make_mesh, make_rules
 from repro.models import api
 from repro.serve.engine import Engine, PagedEngine, Request
-from repro.serve.loop import AsyncEngine
+from repro.serve.loop import AsyncEngine, ReplicatedAsyncEngine
 
 
 def main() -> None:
@@ -80,7 +87,14 @@ def main() -> None:
                     help="repro.ops execution backend for softmax/norm/"
                          "attention (auto = pallas on TPU, reference "
                          "elsewhere)")
-    ap.add_argument("--mesh", default="")
+    ap.add_argument("--mesh", default="",
+                    help="comma-separated mesh shape over (data, model), "
+                         "e.g. 1,8 — shards params and paged attention "
+                         "per the logical-axis rules")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="data-parallel PagedEngine replicas behind one "
+                         "prefix-routed front door (paged open-loop "
+                         "only; params are shared)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -95,7 +109,7 @@ def main() -> None:
     else:
         rules = None
 
-    params, _ = api.init_params(jax.random.PRNGKey(args.seed), cfg)
+    params, param_axes = api.init_params(jax.random.PRNGKey(args.seed), cfg)
     rng = np.random.default_rng(args.seed)
     eos_ids = tuple(int(t) for t in args.eos_ids.split(",") if t.strip())
     reqs = [Request(prompt=rng.integers(0, cfg.vocab_size,
@@ -105,28 +119,41 @@ def main() -> None:
                     seed=args.sample_seed + i, eos_ids=eos_ids)
             for i in range(args.requests)]
     max_len = args.prompt_len + args.new_tokens
+    if args.replicas > 1 and (args.engine != "paged"
+                              or args.open_loop <= 0):
+        raise SystemExit("--replicas requires --engine paged --open-loop")
     if args.engine == "paged":
         blocks = args.num_blocks or max(
             args.requests * ((max_len + 15) // 16 + 1), 16)
-        eng = PagedEngine(cfg, params, num_blocks=blocks, block_size=16,
-                          max_seq_len=max_len, max_running=args.batch,
-                          decode_batch=args.batch,
-                          decode_horizon=args.decode_horizon, rules=rules,
-                          prefix_cache=args.prefix_cache,
-                          watermark=args.watermark)
+
+        def make_engine(p, axes):
+            return PagedEngine(cfg, p, num_blocks=blocks, block_size=16,
+                               max_seq_len=max_len, max_running=args.batch,
+                               decode_batch=args.batch,
+                               decode_horizon=args.decode_horizon,
+                               rules=rules, param_axes=axes,
+                               prefix_cache=args.prefix_cache,
+                               watermark=args.watermark)
+
+        eng = make_engine(params, param_axes)
+        # replicas share the (already device-resident, possibly sharded)
+        # param tree; each owns its own KV pool + scheduler.
+        engines = [eng] + [make_engine(eng.params, None)
+                           for _ in range(args.replicas - 1)]
     else:
         eng = Engine(cfg, params, batch_size=args.batch, max_len=max_len,
                      rules=rules)
     if args.open_loop > 0:
         if args.engine != "paged":
             raise SystemExit("--open-loop requires --engine paged")
-        loop = AsyncEngine(eng)
+        loop = (ReplicatedAsyncEngine(engines) if args.replicas > 1
+                else AsyncEngine(eng))
         arrivals = np.cumsum(
             rng.exponential(1.0 / args.open_loop, len(reqs))).astype(int)
         on_token = None
         if args.stream:
             def on_token(h, tok):
-                print(f"  step {loop.now}: req@{h.arrival} -> {tok}")
+                print(f"  req@{h.arrival} -> {tok}")
         t0 = time.perf_counter()
         handles = [loop.add_request(r, arrival=int(a), on_token=on_token)
                    for r, a in zip(reqs, arrivals)]
@@ -136,9 +163,19 @@ def main() -> None:
         total = sum(len(o) for o in outs)
         st = loop.stats()
         print(f"arch={cfg.name} engine=paged(open-loop) "
-              f"requests={len(reqs)} generated={total} tokens "
+              f"replicas={args.replicas} requests={len(reqs)} "
+              f"generated={total} tokens "
               f"in {dt:.2f}s ({total/dt:.1f} tok/s, "
               f"softmax={cfg.softmax_mode}, norm={cfg.norm_mode})")
+        if args.replicas > 1:
+            print(f"routing: {st['routed_by_prefix']} by prefix, "
+                  f"{st['routed_by_load']} by load")
+            for i, rep in enumerate(st["per_replica"]):
+                print(f"  replica {i}: completed={rep['completed']} "
+                      f"decode_tokens={rep['engine']['decode_tokens']} "
+                      f"prefix_hit_rate="
+                      f"{rep['engine']['prefix_hit_rate']}")
+            return
         print(f"finish_reasons: {st['finish_reasons']}")
         print(f"TTFT steps p50/p99: {st['ttft_steps']['p50']}/"
               f"{st['ttft_steps']['p99']}  ms: {st['ttft_ms']['p50']}/"

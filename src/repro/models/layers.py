@@ -9,6 +9,7 @@ value tree (used by jit'd steps) from the axes tree (used for shardings).
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -712,8 +713,78 @@ def paged_attend(q: Array, pool_k: Array, pool_v: Array, tables: Array,
     mode = _softmax_mode(cfg, phase="serve")
     sole = mode == "sole"
     fn = ops.paged_attention_fn(mode, cfg, backend)
-    return fn(q, pool_k, pool_v, tables, q_start, kv_len, causal=causal,
-              exp_bits=cfg.exp_bits,
+    kw = dict(causal=causal, exp_bits=cfg.exp_bits,
               int8_scale=(LOGIT_INT8_SCALE if sole and cfg.logit_int8
                           else None),
               kv_scale=_paged_kv_scale(cfg))
+    from repro.sharding.rules import active_rules
+    rules = active_rules()
+    plan = None if rules is None else _paged_tp_plan(
+        rules, q.shape[2], pool_k.shape[2])
+    if plan is None:
+        return fn(q, pool_k, pool_v, tables, q_start, kv_len, **kw)
+    return _paged_attend_tp(fn, q, pool_k, pool_v, tables, q_start, kv_len,
+                            rules, plan, kw)
+
+
+def _paged_tp_plan(rules, h: int, kvh: int):
+    """Tensor-parallel plan for paged attention under the active rules.
+
+    Returns ``(axes, kv_sharded)`` — the mesh axis (or axis tuple)
+    sharding the q-heads dim, and whether the pool's kv_heads dim shards
+    the same way — or None when heads fall back to replicated (the
+    divisibility fallback, e.g. qwen2's 14 heads on an 8-way axis) or
+    the axis product is 1 (nothing to split).
+    """
+    ax = rules.dim_spec("heads", h)
+    if ax is None:
+        return None
+    names = ax if isinstance(ax, tuple) else (ax,)
+    if math.prod(rules.axis_sizes[a] for a in names) == 1:
+        return None
+    return ax, rules.dim_spec("kv_heads", kvh) == ax
+
+
+def _paged_attend_tp(fn, q, pool_k, pool_v, tables, q_start, kv_len,
+                     rules, plan, kw):
+    """Run paged attention under shard_map with q heads split over the
+    model axis.
+
+    Two pool regimes (satellite of the divisibility-fallback rules):
+
+    * matched — kv_heads shards the same axis; each shard holds its own
+      contiguous KV block and the local GQA map is ``arange(Hloc)//g``.
+    * replicated KV — kv_heads doesn't divide the axis (GQA with few KV
+      heads): the pool is full on every shard and local q head ``i`` on
+      shard ``s`` reads *global* KV head ``(s*Hloc + i)//g``.
+
+    Page tables and per-seq metadata stay host-global (replicated);
+    the kernel output is resharded back onto the heads axis, so the
+    surrounding GSPMD program sees an ordinary sharded activation.
+    """
+    from repro.sharding.rules import SHARD_MAP_NOCHECK, shard_map
+    axes, kv_sharded = plan
+    h, kvh = q.shape[2], pool_k.shape[2]
+    g = max(h // max(kvh, 1), 1)
+    names = axes if isinstance(axes, tuple) else (axes,)
+    sizes = [rules.axis_sizes[a] for a in names]
+
+    def body(q, pk, pv, tbl, qs, kl):
+        hloc = q.shape[2]
+        if kv_sharded:
+            kvmap = jnp.arange(hloc, dtype=jnp.int32) // g
+        else:
+            shard = jnp.int32(0)
+            for a, n in zip(names, sizes):
+                shard = shard * n + jax.lax.axis_index(a)
+            kvmap = (shard * hloc
+                     + jnp.arange(hloc, dtype=jnp.int32)) // g
+        return fn(q, pk, pv, tbl, qs, kl, kv_head_map=kvmap, **kw)
+
+    from jax.sharding import PartitionSpec as P
+    qspec = P(None, None, axes, None)
+    kvspec = P(None, None, axes if kv_sharded else None, None)
+    wrapped = shard_map(body, mesh=rules.mesh,
+                        in_specs=(qspec, kvspec, kvspec, P(), P(), P()),
+                        out_specs=qspec, **SHARD_MAP_NOCHECK)
+    return wrapped(q, pool_k, pool_v, tables, q_start, kv_len)

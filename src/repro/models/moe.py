@@ -24,18 +24,11 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig
 from repro.models import layers as L
+from repro.sharding.rules import SHARD_MAP_NOCHECK as _SHARD_MAP_NOCHECK
 from repro.sharding.rules import active_rules
+from repro.sharding.rules import shard_map as _shard_map
 
 Array = jax.Array
-
-# jax >= 0.6 exposes jax.shard_map (replication-check kwarg: check_vma);
-# 0.4/0.5 ship it under jax.experimental with check_rep.
-if hasattr(jax, "shard_map"):
-    _shard_map = jax.shard_map
-    _SHARD_MAP_NOCHECK = {"check_vma": False}
-else:  # pragma: no cover - exercised on older jax only
-    from jax.experimental.shard_map import shard_map as _shard_map
-    _SHARD_MAP_NOCHECK = {"check_rep": False}
 
 
 def init_moe_ffn(key, cfg: ArchConfig):

@@ -196,11 +196,16 @@ def _paged_forward(params, tokens, positions, n_valid, kv_len, tables,
     residual-add + PTF quantize + AILayerNorm runs as one fused
     VMEM-resident kernel instead of three HBM round trips.
     """
-    from repro.serve.kv_cache import slots_for_positions, write_tokens
+    from repro.serve.kv_cache import (PAGED_KV_AXES, slots_for_positions,
+                                      write_tokens)
     ffn_apply = ffn_apply or (lambda p, x, c, ph: L.apply_mlp(x, p, c))
     x = L.embed_tokens(params["embed"], tokens, cfg)
     q_start = positions[:, 0]
-    pk, pv = pools["k"], pools["v"]
+    # Pin the pool layout (kv_heads over model, pages host-global) so
+    # donated jit round trips and the scatter/attend pair below keep one
+    # stable sharding instead of letting GSPMD re-derive it per call.
+    pk = constrain(pools["k"], *PAGED_KV_AXES["k"])
+    pv = constrain(pools["v"], *PAGED_KV_AXES["v"])
     block_size = pk.shape[2]
     block_ids, offsets = slots_for_positions(positions, block_size, tables)
     # mask padded-tail writes to the null page (page 0): positions at or

@@ -87,17 +87,21 @@ def _paged_attention(sole: bool):
     def fn(q, pool_k, pool_v, tables, q_start, kv_len, *, causal: bool,
            exp_bits: int = 4, int8_scale: Optional[float] = None,
            kv_scale: Optional[float] = None,
-           interpret: Optional[bool] = None, **kw):
+           kv_head_map=None, interpret: Optional[bool] = None, **kw):
         """Streams pages through the scalar-prefetch paged flash kernel —
         SOLE's online softmax in the serving hot loop. Layouts match the
-        reference twin: q (B, C, H, hd) -> (B, C, H, hd)."""
+        reference twin: q (B, C, H, hd) -> (B, C, H, hd). ``kv_head_map``
+        (per-q-head pool KV-head index) overrides the contiguous-GQA
+        default — required inside shard_map when q heads are sharded but
+        the KV pool stays replicated."""
         from repro.kernels.flash_e2softmax import flash_e2softmax_paged
         meta = jnp.stack([q_start.astype(jnp.int32),
                           kv_len.astype(jnp.int32)], 1)
         ctx = flash_e2softmax_paged(
             jnp.moveaxis(q, 1, 2), pool_k, pool_v, tables, meta,
             causal=causal, sole=sole, exp_bits=exp_bits,
-            int8_scale=int8_scale, kv_scale=kv_scale, interpret=interpret)
+            int8_scale=int8_scale, kv_scale=kv_scale,
+            kv_head_map=kv_head_map, interpret=interpret)
         return jnp.moveaxis(ctx, 1, 2).astype(q.dtype)
     return fn
 

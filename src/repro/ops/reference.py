@@ -158,13 +158,16 @@ def _paged_attention_ref(mode: str):
     def fn(q, pool_k, pool_v, tables, q_start, kv_len, *,
            causal: bool, exp_bits: int = 4,
            int8_scale: Optional[float] = None,
-           kv_scale: Optional[float] = None, **kw):
+           kv_scale: Optional[float] = None, kv_head_map=None, **kw):
         """Gather pages to a contiguous cache, reuse the two-pass softmax
         path — the oracle for paged-vs-dense equivalence tests and the
         fallback for softmax modes the paged kernel does not implement.
 
         q: (B, C, H, hd); pool_k/pool_v: (N, bs, KV, hd); tables (B, NB);
         q_start/kv_len: (B,). Returns (B, C, H, hd) in q.dtype.
+        ``kv_head_map`` (per-q-head pool KV-head index) overrides the
+        contiguous-GQA repeat — used inside shard_map when q heads are
+        sharded but the KV pool stays replicated.
         """
         from repro.serve.kv_cache import gather_kv
         b, c, h, hd = q.shape
@@ -174,8 +177,12 @@ def _paged_attention_ref(mode: str):
             k = k.astype(q.dtype) * jnp.asarray(kv_scale, q.dtype)
             v = v.astype(q.dtype) * jnp.asarray(kv_scale, q.dtype)
         t = k.shape[1]
-        kf = _repeat_kv(k.astype(q.dtype), h)
-        vf = _repeat_kv(v.astype(q.dtype), h)
+        if kv_head_map is not None:
+            kf = jnp.take(k.astype(q.dtype), kv_head_map, axis=2)
+            vf = jnp.take(v.astype(q.dtype), kv_head_map, axis=2)
+        else:
+            kf = _repeat_kv(k.astype(q.dtype), h)
+            vf = _repeat_kv(v.astype(q.dtype), h)
         qs = q * (hd ** -0.5)
         logits = jnp.einsum("bchd,bthd->bhct", qs, kf).astype(jnp.float32)
         cols = jnp.arange(t)[None, None, None, :]

@@ -101,7 +101,7 @@ class PagedEngine:
                  prefill_chunk: int = 16, decode_horizon: int = 8,
                  backend: Optional[str] = None,
                  prefix_cache: bool = True, watermark: int = 1,
-                 rules: Optional[R.Rules] = None):
+                 rules: Optional[R.Rules] = None, param_axes=None):
         if cfg.family != "dense":
             raise ValueError(
                 f"PagedEngine serves dense LMs, got {cfg.family}")
@@ -115,7 +115,13 @@ class PagedEngine:
             raise ValueError(
                 f"decode_horizon must be >= 1, got {decode_horizon}")
         self.cfg = cfg
-        self.params = params
+        # with a mesh + the logical-axes tree from api.init_params, lay
+        # the weights out up front (heads/ff over model, divisibility
+        # fallback per dim) instead of letting the first jitted step
+        # replicate them everywhere.
+        self.params = (R.shard_params(params, param_axes, rules)
+                       if rules is not None and param_axes is not None
+                       else params)
         self.decode_batch = decode_batch
         self.decode_horizon = decode_horizon
         self.backend = backend
@@ -314,15 +320,22 @@ class PagedEngine:
         horizon (up to ``decode_horizon`` fused tokens per lane) for
         the running batch, reclaim finished sequences. Finished
         sequences are reaped right after prefill too, so their pages
-        fund the decode batch's on-demand growth."""
-        self.sched.admit()
-        seq = self.sched.next_prefill()
-        if seq is not None:
-            self._prefill_step(seq)
-        self._reap_done()
-        self._decode_step()
-        self._reap_done()
-        self.steps += 1
+        fund the decode batch's on-demand growth.
+
+        The step itself enters the engine's mesh/rules context — not
+        just ``generate()`` — so externally driven loops (AsyncEngine)
+        trace sharded engines with the sharding constraints active.
+        """
+        meshctx, rulectx = _run_ctx(self.rules)
+        with meshctx, rulectx:
+            self.sched.admit()
+            seq = self.sched.next_prefill()
+            if seq is not None:
+                self._prefill_step(seq)
+            self._reap_done()
+            self._decode_step()
+            self._reap_done()
+            self.steps += 1
 
     # -- public API -----------------------------------------------------------
 

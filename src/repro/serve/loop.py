@@ -38,6 +38,7 @@ streaming behavior of a horizon-batched engine, not an artifact.
 from __future__ import annotations
 
 import time
+import zlib
 from typing import Callable, Dict, Iterator, List, Optional
 
 import numpy as np
@@ -236,6 +237,11 @@ class AsyncEngine:
 
     # -- accounting -----------------------------------------------------------
 
+    @property
+    def outstanding(self) -> int:
+        """Requests enqueued or in flight (the routing load signal)."""
+        return len(self._pending) + len(self._live)
+
     def stats(self) -> Dict[str, object]:
         """p50/p99 TTFT + ITL (steps and wall ms) over completed
         requests, finish-reason counts, and the wrapped engine's
@@ -260,4 +266,86 @@ class AsyncEngine:
             "ttft_ms": _percentiles(ttft_ms),
             "itl_ms": _percentiles(itl_ms),
             "engine": self.engine.stats(),
+        }
+
+
+class ReplicatedAsyncEngine:
+    """Data-parallel serving: N :class:`AsyncEngine` replicas behind one
+    ``add_request`` / ``run`` / ``stats`` front door.
+
+    Each replica wraps its own :class:`PagedEngine` (own KV pool, own
+    scheduler, own prefix cache) over *shared* — typically
+    mesh-sharded — params; the router decides which replica serves a
+    request:
+
+    * **prefix affinity** — prompts with at least one full KV block are
+      routed by a deterministic hash of their first block of tokens, so
+      requests sharing a system prompt land on the same replica and hit
+      its prefix cache instead of re-prefilling N copies;
+    * **least-loaded** — shorter prompts (no full block to key on) go
+      to the replica with the fewest outstanding requests.
+
+    ``step()`` round-robins one loop iteration over every replica with
+    work, so replicas interleave fairly under a cooperative single-host
+    clock; on a multi-process deployment each replica would own a
+    process and the router alone would remain.
+    """
+
+    def __init__(self, engines: List[PagedEngine]):
+        if not engines:
+            raise ValueError("ReplicatedAsyncEngine needs >= 1 engine")
+        self.replicas = [AsyncEngine(e) for e in engines]
+        self._block = engines[0].cache.block_size
+        self.routed_by_prefix = 0
+        self.routed_by_load = 0
+
+    def route(self, request: Request) -> int:
+        """Replica index for one request (pure; exposed for tests)."""
+        prompt = np.ascontiguousarray(
+            np.asarray(request.prompt, np.int32))
+        if len(prompt) >= self._block:
+            key = zlib.crc32(prompt[:self._block].tobytes())
+            return key % len(self.replicas)
+        return min(range(len(self.replicas)),
+                   key=lambda i: (self.replicas[i].outstanding, i))
+
+    def add_request(self, request: Request, *,
+                    arrival: Optional[int] = None,
+                    on_token: Optional[Callable] = None) -> RequestHandle:
+        i = self.route(request)
+        if len(np.asarray(request.prompt)) >= self._block:
+            self.routed_by_prefix += 1
+        else:
+            self.routed_by_load += 1
+        return self.replicas[i].add_request(request, arrival=arrival,
+                                            on_token=on_token)
+
+    @property
+    def has_work(self) -> bool:
+        return any(r.has_work for r in self.replicas)
+
+    def step(self) -> None:
+        for r in self.replicas:
+            if r.has_work:
+                r.step()
+
+    def run(self) -> List[RequestHandle]:
+        """Drive every replica until drained; completed handles grouped
+        by replica, finish order within each."""
+        while self.has_work:
+            self.step()
+        return [h for r in self.replicas for h in r.completed]
+
+    def stats(self) -> Dict[str, object]:
+        """Aggregate counters next to each replica's full stats()."""
+        per = [r.stats() for r in self.replicas]
+        return {
+            "replicas": len(self.replicas),
+            "completed": sum(s["completed"] for s in per),
+            "decode_tokens": sum(s["engine"]["decode_tokens"]
+                                 for s in per),
+            "steps": max(s["engine"]["steps"] for s in per),
+            "routed_by_prefix": self.routed_by_prefix,
+            "routed_by_load": self.routed_by_load,
+            "per_replica": per,
         }

@@ -18,6 +18,17 @@ import jax
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
+# jax >= 0.6 exposes jax.shard_map (replication-check kwarg: check_vma);
+# 0.4/0.5 ship it under jax.experimental with check_rep. Modules that
+# need per-shard code (moe dispatch, paged attention TP) import the shim
+# from here so the version split lives in one place.
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+    SHARD_MAP_NOCHECK = {"check_vma": False}
+else:  # pragma: no cover - exercised on older jax only
+    from jax.experimental.shard_map import shard_map
+    SHARD_MAP_NOCHECK = {"check_rep": False}
+
 # logical axis -> preferred mesh axes (joined). Tuples shard over the
 # product of the listed mesh axes (those present in the mesh).
 DEFAULT_RULES = {
@@ -156,6 +167,20 @@ def param_specs(axes_tree, shapes_tree, rules: Rules):
         is_leaf=lambda x: isinstance(x, tuple) and all(
             a is None or isinstance(a, str) for a in x),
     )
+
+
+def shard_params(params, axes_tree, rules: Optional[Rules]):
+    """device_put a param-value tree onto the rules' mesh layout.
+
+    ``axes_tree`` is the logical-axes tree returned by
+    ``models.api.init_params`` (tuples of logical names per leaf);
+    divisibility fallback applies per dim. No-op when ``rules`` is None.
+    """
+    if rules is None:
+        return params
+    return jax.tree.map(
+        lambda v, ax: jax.device_put(v, rules.sharding(ax, v.shape)),
+        params, axes_tree)
 
 
 def zero1_spec(spec: P, shape, rules: Rules, axis: str = "data") -> P:

@@ -1,6 +1,8 @@
 # NOTE: no XLA_FLAGS here on purpose — unit tests and benches must see the
 # real single CPU device. Mesh-dependent tests spawn subprocesses with
 # --xla_force_host_platform_device_count set (see tests/_mesh_helpers.py).
+import weakref
+
 import numpy as np
 import pytest
 
@@ -8,3 +10,38 @@ import pytest
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture(autouse=True)
+def _kv_refcount_leak_check(request, monkeypatch):
+    """Run ``PagedKVCache.check_refcounts()`` on every cache a test
+    created, at teardown — so a refcount/accounting regression fails
+    the test that caused it instead of some later test that happens to
+    reuse the pool.
+
+    The sweep asserts the full invariant set: refcounts match the page
+    tables and are never negative, and the free / evictable / in-table
+    page sets partition the pool (no leaked page unaccounted anywhere).
+    It is safe mid-flight — sequences a test deliberately leaves live
+    just show up in the table counts.
+
+    Opt out with ``@pytest.mark.kv_leak_exempt`` for tests that corrupt
+    cache state on purpose.
+    """
+    from repro.serve.kv_cache import PagedKVCache
+
+    live = []
+    orig_init = PagedKVCache.__init__
+
+    def tracking_init(self, *args, **kwargs):
+        orig_init(self, *args, **kwargs)
+        live.append(weakref.ref(self))
+
+    monkeypatch.setattr(PagedKVCache, "__init__", tracking_init)
+    yield
+    if request.node.get_closest_marker("kv_leak_exempt"):
+        return
+    for ref in live:
+        cache = ref()
+        if cache is not None:
+            cache.check_refcounts()
