@@ -6,7 +6,9 @@ CI copies the committed ``benchmarks/BENCH_serve.json`` aside, reruns
 copy. Every paged-engine entry (any dict whose ``engine`` label starts
 with ``paged``, found recursively) contributes its guarded metrics:
 
-* **throughput** (``tok_s``, ``agg_tok_s``, ``tokens_per_dispatch``):
+* **throughput** (``tok_s``, ``agg_tok_s``, ``tokens_per_dispatch``,
+  and the speculative-decoding pair ``acceptance_rate`` /
+  ``accepted_tokens_per_target_dispatch``):
   fail when the fresh value drops below ``(1 - max_drop)`` of
   baseline. Wall-clock tok/s (and the replicated front door's
   aggregate ``agg_tok_s``) on shared runners is noisy — the 20%
@@ -43,8 +45,15 @@ import sys
 
 
 # higher is better: fail on a drop. agg_tok_s is the replicated front
-# door's aggregate throughput (all replicas, one wall clock).
-GUARDED_METRICS = ("tok_s", "agg_tok_s", "tokens_per_dispatch")
+# door's aggregate throughput (all replicas, one wall clock). The two
+# speculative-decoding metrics are deterministic (acceptance compares
+# drafts against pinned draws; the dispatch count follows), so a drop
+# is a real drafter/controller/verify regression, never runner noise —
+# both ride the warn-on-first-recording path until a baseline that
+# includes them is committed.
+GUARDED_METRICS = ("tok_s", "agg_tok_s", "tokens_per_dispatch",
+                   "acceptance_rate",
+                   "accepted_tokens_per_target_dispatch")
 # lower is better (latency percentiles): fail on a rise. Step-based =
 # deterministic; the *_ms twins are informational only.
 LATENCY_METRICS = ("ttft_p99_steps", "itl_p99_steps")

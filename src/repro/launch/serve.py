@@ -20,6 +20,13 @@ loop, with early exit on --eos-ids and p50/p99 TTFT+ITL reported):
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2_0_5b --smoke \
     --engine paged --open-loop 0.5 --eos-ids 7 --stream
 
+Speculative decoding (paged engine; draft model or model-free n-gram
+drafting, batched K+1 verify, bit-for-bit accept-prefix):
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2_0_5b --smoke \
+    --engine paged --spec-decode draft:qwen2_0_5b --spec-k 4
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2_0_5b --smoke \
+    --engine paged --spec-decode ngram
+
 Sharded serving over a mesh (data x model; params laid out per the
 logical-axis rules, paged attention split over the model axis) plus
 data-parallel engine replicas behind one routed front door:
@@ -82,6 +89,18 @@ def main() -> None:
                          "step (paged engine only; 0 = closed batch)")
     ap.add_argument("--stream", action="store_true",
                     help="print tokens as they surface (open-loop mode)")
+    ap.add_argument("--spec-decode", default="", metavar="MODE",
+                    help="speculative decoding (paged engine only): "
+                         "'ngram' = model-free prompt-lookup drafting, "
+                         "'draft:<arch>' = a small draft model sharing "
+                         "the target's vocab (e.g. draft:qwen2_0_5b), "
+                         "'draft' = self-draft with the target's own "
+                         "architecture; output streams stay bit-for-bit "
+                         "identical to plain decode")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="max draft tokens per lane per verify dispatch "
+                         "(the EMA acceptance controller adapts each "
+                         "lane's K below this)")
     ap.add_argument("--ops-backend",
                     choices=("auto", "reference", "pallas"), default="auto",
                     help="repro.ops execution backend for softmax/norm/"
@@ -122,9 +141,15 @@ def main() -> None:
     if args.replicas > 1 and (args.engine != "paged"
                               or args.open_loop <= 0):
         raise SystemExit("--replicas requires --engine paged --open-loop")
+    if args.spec_decode and args.engine != "paged":
+        raise SystemExit("--spec-decode requires --engine paged")
     if args.engine == "paged":
         blocks = args.num_blocks or max(
             args.requests * ((max_len + 15) // 16 + 1), 16)
+        from repro.serve.spec import spec_config_from_flag
+        spec = spec_config_from_flag(args.spec_decode, cfg,
+                                     max_k=args.spec_k, seed=args.seed,
+                                     smoke=args.smoke)
 
         def make_engine(p, axes):
             return PagedEngine(cfg, p, num_blocks=blocks, block_size=16,
@@ -133,7 +158,8 @@ def main() -> None:
                                decode_horizon=args.decode_horizon,
                                rules=rules, param_axes=axes,
                                prefix_cache=args.prefix_cache,
-                               watermark=args.watermark)
+                               watermark=args.watermark,
+                               spec_config=spec)
 
         eng = make_engine(params, param_axes)
         # replicas share the (already device-resident, possibly sharded)

@@ -337,3 +337,52 @@ def decode_horizon_paged(params, pools, token: Array, pos: Array,
     (pools, _, _), (toks, done) = jax.lax.scan(
         step, (pools, token, pos), jnp.arange(num_steps, dtype=jnp.int32))
     return jnp.transpose(toks), jnp.transpose(done), pools
+
+
+def verify_paged(params, pools, tokens: Array, q_start: Array,
+                 n_valid: Array, tables: Array, temperature: Array,
+                 top_k: Array, seed: Array, counter: Array, eos_ids: Array,
+                 cfg: ArchConfig, *, use_top_k: bool = True,
+                 stochastic: bool = True, use_eos: bool = True,
+                 backend: Optional[str] = None, ffn_apply=None):
+    """Speculative-verify dispatch: score C = K+1 positions per lane in
+    **one** target forward and draw the pinned counter-keyed sample at
+    every position in-jit.
+
+    tokens (B, C) is each lane's last kept token followed by its K draft
+    tokens (padded with zeros past ``n_valid``), fed at absolute
+    positions ``q_start .. q_start + C - 1``. The forward is exactly the
+    chunked-prefill path (:func:`prefill_paged`): causal, draft K/V
+    written to the lane's pre-extended pages up front, padded-tail
+    writes routed to the null page. In exact softmax mode the logits at
+    slot ``i`` are bit-identical to what ``decode_step_paged`` would
+    produce after feeding the same prefix — pinned by
+    tests/test_spec_decode.py — so the pinned draw at slot ``i``
+    (counter ``counter + i``; see serve/sampling.py) is exactly the
+    token non-speculative decode would emit there. Acceptance on the
+    host is then a prefix match: accept drafts while they equal the
+    pinned draws; the first mismatching slot's pinned draw is the
+    correction token, and a fully matching draft yields slot K's draw
+    as a bonus token.
+
+    Returns ``(pinned (B, C) int32, done (B, C) bool, pools)`` — the
+    per-slot pinned draws, their eos membership mask (``eos_ids``
+    (B, E), ``-1``-padded), and the updated pools. Rejected slots'
+    page-table tail is reclaimed by the caller via
+    ``PagedKVCache.truncate``; their written K/V is never read (kv_len
+    masks it) and is overwritten by the next dispatch.
+    """
+    from repro.serve.sampling import eos_hits, sample_tokens
+    logits, pools = prefill_paged(params, tokens, q_start, n_valid,
+                                  tables, pools, cfg, backend=backend,
+                                  ffn_apply=ffn_apply)
+    b, c = tokens.shape
+    flat = logits.reshape(b * c, logits.shape[-1])
+    ctr = (counter[:, None] + jnp.arange(c)[None]).reshape(-1)
+    rep = lambda a: jnp.repeat(a, c)     # (B,) lane params -> (B*C,)
+    pinned = sample_tokens(flat, rep(temperature), rep(top_k), rep(seed),
+                           ctr, cfg.vocab_size, use_top_k=use_top_k,
+                           stochastic=stochastic).reshape(b, c)
+    done = (eos_hits(pinned, eos_ids[:, None, :]) if use_eos
+            else jnp.zeros(pinned.shape, jnp.bool_))
+    return pinned, done, pools

@@ -84,7 +84,14 @@ class PagedEngine:
         H tokens (COW copies applied up front), and H is floored to a
         power of two so at most ``log2(decode_horizon)+1`` scan shapes
         ever compile;
-      * ``_copy``: one page duplicated across layers/pools (COW).
+      * ``_copy``: one page duplicated across layers/pools (COW);
+      * ``_verify`` (speculative decoding, ``spec_config`` set): one
+        batched K+1-wide target forward scoring every lane's drafted
+        tokens, with the pinned counter-keyed draws computed in-jit —
+        the engine accepts the longest draft prefix matching them, so
+        output streams stay bit-for-bit identical to plain decode
+        while each verify dispatch can emit up to K+1 tokens per lane
+        (see serve/spec.py).
 
     Attention implementations resolve through the ``repro.ops``
     registry: ``backend="pallas"`` streams pages through the paged flash
@@ -101,7 +108,8 @@ class PagedEngine:
                  prefill_chunk: int = 16, decode_horizon: int = 8,
                  backend: Optional[str] = None,
                  prefix_cache: bool = True, watermark: int = 1,
-                 rules: Optional[R.Rules] = None, param_axes=None):
+                 rules: Optional[R.Rules] = None, param_axes=None,
+                 spec_config=None):
         if cfg.family != "dense":
             raise ValueError(
                 f"PagedEngine serves dense LMs, got {cfg.family}")
@@ -136,11 +144,26 @@ class PagedEngine:
         self.sched = Scheduler(self.cache, max_running=max_running,
                                prefill_chunk=prefill_chunk,
                                watermark=watermark)
+        # speculative decoding (serve/spec.py): drafter + K controller.
+        # A draft model must share the target's vocab — acceptance
+        # compares draft ids against pinned draws over cfg.vocab_size.
+        self.spec = spec_config
+        if spec_config is not None:
+            dv = getattr(spec_config.drafter, "vocab_size", None)
+            if dv is not None and dv != cfg.vocab_size:
+                raise ValueError(
+                    f"drafter vocab {dv} != target vocab "
+                    f"{cfg.vocab_size}: speculation needs a shared "
+                    "tokenizer")
         self.steps = 0
         self.decode_tokens = 0
         self.decode_dispatches = 0
         self.truncated_tokens = 0        # horizon-tail draws discarded
         self.reclaimed_pages = 0         # pages handed back by truncate
+        self.spec_dispatches = 0         # verify dispatches issued
+        self.spec_proposed = 0           # draft tokens sent to verify
+        self.spec_accepted = 0           # draft tokens accepted
+        self.spec_fallbacks = 0          # decode steps spec handed back
         self.finish_reasons: Dict[str, int] = {}
         self._finished: Dict[int, List[int]] = {}
 
@@ -158,9 +181,20 @@ class PagedEngine:
                 use_top_k=use_top_k, stochastic=stochastic,
                 use_eos=use_eos, backend=backend)
 
+        def _verify(params, pools, tokens, q_start, n_valid, tables,
+                    temperature, top_k, seed, counter, eos_ids,
+                    use_top_k, stochastic, use_eos):
+            return self.model.verify_paged(
+                params, pools, tokens, q_start, n_valid, tables,
+                temperature, top_k, seed, counter, eos_ids, cfg,
+                use_top_k=use_top_k, stochastic=stochastic,
+                use_eos=use_eos, backend=backend)
+
         self._prefill = jax.jit(_prefill, donate_argnums=(1,))
         self._decode_h = jax.jit(_decode_h, donate_argnums=(1,),
                                  static_argnums=(10, 11, 12, 13))
+        self._verify = jax.jit(_verify, donate_argnums=(1,),
+                               static_argnums=(11, 12, 13))
         self._copy = jax.jit(copy_pages, donate_argnums=(0,))
 
     def _apply_copies(self, copies: List[Tuple[int, int]]) -> None:
@@ -306,6 +340,122 @@ class PagedEngine:
                     seq.seq_id, int(pos[i]) + kept)
         self.decode_dispatches += 1
 
+    def _spec_step(self) -> bool:
+        """One speculative decode round: draft K tokens per lane, score
+        all K+1 positions in **one** ``verify_paged`` target dispatch,
+        accept the longest draft prefix matching the pinned draws.
+
+        Returns False when speculation does not apply this step — no
+        spec config, a pending prefill (token-time must not run ahead
+        of chunk-time, mirroring ``Scheduler.decode_horizon``'s rule),
+        every lane's controller at K = 0, or no drafter proposal — and
+        the caller falls through to the plain fused-horizon path.
+
+        Accounting per lane (draft length k, verify width k+1):
+        ``acc`` = accepted draft prefix; the emitted row is the pinned
+        draws ``rows[:acc+1]`` (accepted tokens + correction/bonus);
+        ``apply_finish`` cuts it at the first eos/stop event exactly as
+        in the horizon path, the host counter advances by the kept
+        count only, and ``truncate`` reclaims every page past the kept
+        KV — the rejected tail — immediately.
+        """
+        if self.spec is None:
+            return False
+        batch = self.sched.decode_batch(self.decode_batch)
+        if not batch or any(s.in_prefill for s in self.sched.running):
+            return False
+        ks = self.sched.spec_ks(batch, self.spec)
+        if max(ks) == 0:
+            self.spec_fallbacks += 1
+            return False
+        drafts = self.spec.drafter.propose(batch, ks)
+        drafts = [[int(t) for t in d[:k]] for d, k in zip(drafts, ks)]
+        if not any(drafts):
+            self.spec_fallbacks += 1
+            return False
+        # pow2 verify width: C = K+1 compiles a handful of shapes
+        kmax = 1 << (max(len(d) for d in drafts) - 1).bit_length()
+        c = kmax + 1
+        lanes: List[Tuple[Sequence, List[int]]] = []
+        for seq, draft in zip(batch, drafts):
+            if seq not in self.sched.running:
+                continue                 # preempted by an earlier lane
+            pos = seq.prompt_len + len(seq.out) - 1
+            # pre-extend for feed token + all drafts, like the horizon
+            copies = self.sched.ensure_tokens(seq, pos,
+                                              pos + 1 + len(draft))
+            if copies is None:
+                continue
+            self._apply_copies(copies)
+            lanes.append((seq, draft))
+        assert all(s in self.sched.running for s, _ in lanes)
+        if not lanes:
+            return True                  # everything preempted this step
+        d = self.decode_batch
+        tokens = np.zeros((d, c), np.int32)
+        q_start = np.zeros((d,), np.int32)
+        # null lanes mirror the decode scan's self-absorbing null-page
+        # lanes: one fake token written to (and read from) page 0.
+        n_valid = np.ones((d,), np.int32)
+        temp = np.zeros((d,), np.float32)
+        topk = np.zeros((d,), np.int32)
+        seed = np.zeros((d,), np.uint32)
+        ctr = np.zeros((d,), np.int32)
+        sids: List[Optional[int]] = [None] * d
+        for i, (seq, draft) in enumerate(lanes):
+            row = [seq.out[-1]] + draft
+            tokens[i, :len(row)] = row
+            q_start[i] = seq.prompt_len + len(seq.out) - 1
+            n_valid[i] = len(row)
+            s = seq.sampler
+            temp[i], topk[i], seed[i] = s.temperature, s.top_k, s.seed
+            ctr[i] = len(seq.out)
+            sids[i] = seq.seq_id
+        tables = jnp.asarray(self.cache.batch_tables(sids))
+        use_top_k = any(s.sampler.top_k > 0 for s, _ in lanes)
+        stochastic = any(s.sampler.temperature > 0 for s, _ in lanes)
+        widest = max(len(s.sampler.eos_ids) for s, _ in lanes)
+        use_eos = widest > 0
+        eos = np.full((d, 1), -1, np.int32)
+        if use_eos:
+            width = 1 << (widest - 1).bit_length() if widest > 1 else 1
+            eos = np.full((d, width), -1, np.int32)
+            eos[:len(lanes)] = eos_table([s.sampler for s, _ in lanes],
+                                         width)
+        pinned, done, pools = self._verify(
+            self.params, self.cache.pools, jnp.asarray(tokens),
+            jnp.asarray(q_start), jnp.asarray(n_valid), tables,
+            jnp.asarray(temp), jnp.asarray(topk), jnp.asarray(seed),
+            jnp.asarray(ctr), jnp.asarray(eos), use_top_k, stochastic,
+            use_eos)
+        self.cache.pools = pools
+        rows = np.asarray(pinned)
+        done_rows = np.asarray(done)
+        for i, (seq, draft) in enumerate(lanes):
+            acc = 0
+            while acc < len(draft) and draft[acc] == rows[i, acc]:
+                acc += 1
+            kept, reason = apply_finish(seq.sampler, seq.out,
+                                        rows[i, :acc + 1],
+                                        eos_row=done_rows[i, :acc + 1])
+            seq.sampler.skip(kept)       # host stream stays aligned
+            pos = int(q_start[i])
+            seq.prefilled = pos + kept   # valid written KV only
+            self.decode_tokens += kept
+            self.truncated_tokens += 1 + len(draft) - kept
+            self.spec_proposed += len(draft)
+            self.spec_accepted += acc
+            self.sched.spec_feedback(seq, len(draft), acc, self.spec)
+            if reason is not None:
+                seq.finish_reason = reason
+            # rejected tails (and finish tails) hand their pre-extended
+            # pages back mid-step via the existing truncate path
+            self.reclaimed_pages += self.cache.truncate(seq.seq_id,
+                                                        pos + kept)
+        self.decode_dispatches += 1
+        self.spec_dispatches += 1
+        return True
+
     def _reap_done(self) -> None:
         for seq in list(self.sched.running):
             if seq.done:
@@ -333,7 +483,8 @@ class PagedEngine:
             if seq is not None:
                 self._prefill_step(seq)
             self._reap_done()
-            self._decode_step()
+            if not self._spec_step():
+                self._decode_step()
             self._reap_done()
             self.steps += 1
 
@@ -382,7 +533,7 @@ class PagedEngine:
         """Serving counters: prefix-cache hits, COW/eviction/preemption
         activity, and pool occupancy."""
         c, s = self.cache, self.sched
-        return {
+        out = {
             "prefix_cache": c.prefix_cache,
             "prefix_hit_rate": round(c.prefix_hit_rate(), 4),
             "prefix_hit_tokens": c.prefix_hit_tokens,
@@ -407,6 +558,23 @@ class PagedEngine:
             "truncated_tokens": self.truncated_tokens,
             "reclaimed_pages": self.reclaimed_pages,
         }
+        if self.spec is not None:
+            # accepted tokens per *target* dispatch is exactly
+            # tokens_per_dispatch under speculation (verify dispatches
+            # count as decode dispatches and only kept tokens count),
+            # named for what it measures: the spec-decode win.
+            out.update({
+                "spec_dispatches": self.spec_dispatches,
+                "spec_proposed_tokens": self.spec_proposed,
+                "spec_accepted_tokens": self.spec_accepted,
+                "spec_fallback_steps": self.spec_fallbacks,
+                "acceptance_rate": round(
+                    self.spec_accepted / max(self.spec_proposed, 1), 4),
+                "accepted_tokens_per_target_dispatch": round(
+                    self.decode_tokens
+                    / max(self.decode_dispatches, 1), 3),
+            })
+        return out
 
     def reset_stats(self) -> None:
         """Zero the serving counters (cached pages stay resident)."""
@@ -420,6 +588,10 @@ class PagedEngine:
         self.decode_dispatches = 0
         self.truncated_tokens = 0
         self.reclaimed_pages = 0
+        self.spec_dispatches = 0
+        self.spec_proposed = 0
+        self.spec_accepted = 0
+        self.spec_fallbacks = 0
         self.finish_reasons = {}
 
 

@@ -228,8 +228,13 @@ class Sampler:
                 break                   # earliest end wins
         return best
 
-    def __call__(self, logits: np.ndarray) -> int:
-        """One token id from a (padded_vocab,) logits row."""
+    def draw(self, logits: np.ndarray, counter: int) -> int:
+        """The pinned draw at an explicit ``counter``, **without**
+        touching the stream state. This is the whole sampling contract
+        as a pure function of ``(logits, counter)`` — the speculative
+        drafters (serve/spec.py) propose through it at the exact
+        counters the verify dispatch will check, and ``__call__`` is
+        just ``draw`` at ``self._n`` plus the counter bump."""
         z = np.asarray(logits, np.float32)
         if self.vocab_size and self.vocab_size < len(z):
             z = z[:self.vocab_size]
@@ -242,9 +247,16 @@ class Sampler:
         if self.greedy:
             return int(np.argmax(z))    # greedy consumes no draw
         y = z / np.float32(self.temperature)
-        g = np.asarray(_gumbel_row(self.seed, self._n, len(z)))
-        self._n += 1
+        g = np.asarray(_gumbel_row(self.seed, counter, len(z)))
         return int(np.argmax(y + g))
+
+    def __call__(self, logits: np.ndarray) -> int:
+        """One token id from a (padded_vocab,) logits row, consuming
+        the next counter (greedy lanes consume no draw)."""
+        tok = self.draw(logits, self._n)
+        if not self.greedy:
+            self._n += 1
+        return tok
 
 
 def eos_table(samplers: Seq["Sampler"], width: int = 0) -> np.ndarray:

@@ -49,6 +49,13 @@ class Sequence:                        # tracked in running/waiting by object
     # cache.prefix_keys(prompt), computed once at first admission try so
     # a long prompt stuck at the queue head isn't re-hashed every step.
     prefix_keys: Optional[List[Tuple[int, bytes]]] = None
+    # speculative-decoding lane state (Scheduler.spec_ks/spec_feedback):
+    # current draft length (None until the first spec round, 0 = lane
+    # fell back to plain horizon decode), EMA acceptance rate, and
+    # rounds spent at K=0 waiting for the re-probe.
+    spec_k: Optional[int] = None
+    spec_ema: float = 1.0
+    spec_cool: int = 0
     _replay: Optional[np.ndarray] = dataclasses.field(default=None,
                                                       repr=False)
 
@@ -271,6 +278,49 @@ class Scheduler:
         for s in lanes:
             h = min(h, s.max_new_tokens - len(s.out))
         return h
+
+    def spec_ks(self, lanes: List[Sequence], spec) -> List[int]:
+        """Per-lane draft lengths for one speculative verify round —
+        the ``spec_config`` lane policy.
+
+        Each lane runs an EMA acceptance-rate controller
+        (:meth:`spec_feedback`): K starts at ``spec.max_k``, halves
+        when drafts stop paying and doubles back when they do. K = 0
+        means the lane has fallen back to plain horizon decode; after
+        ``spec.retry_after`` rounds there it re-probes with K = 1 (and
+        a reset EMA) so a tail that turns predictable can win
+        speculation back. The budget finish event caps K exactly like
+        the decode horizon: a verify emits at most K + 1 tokens
+        (accepted prefix + correction/bonus), so K is clipped to
+        ``remaining - 1`` and a lane one token from its budget drafts
+        nothing. When every lane lands on 0 the engine takes the plain
+        fused-horizon path for the step.
+        """
+        ks = []
+        for s in lanes:
+            if s.spec_k is None:
+                s.spec_k = spec.max_k
+            elif s.spec_k == 0:
+                s.spec_cool += 1
+                if s.spec_cool >= spec.retry_after:
+                    s.spec_k, s.spec_ema, s.spec_cool = 1, 1.0, 0
+            ks.append(max(0, min(s.spec_k,
+                                 s.max_new_tokens - len(s.out) - 1)))
+        return ks
+
+    def spec_feedback(self, seq: Sequence, proposed: int, accepted: int,
+                      spec) -> None:
+        """Fold one verify round's acceptance into the lane's EMA and
+        adapt its K. Rounds where the drafter proposed nothing carry no
+        signal and leave the controller untouched."""
+        if proposed <= 0:
+            return
+        a = spec.ema_alpha
+        seq.spec_ema = (1 - a) * seq.spec_ema + a * (accepted / proposed)
+        if seq.spec_ema < spec.demote_below:
+            seq.spec_k //= 2
+        elif seq.spec_ema > spec.promote_above:
+            seq.spec_k = min(max(2 * seq.spec_k, 1), spec.max_k)
 
     def finish(self, seq: Sequence) -> None:
         """Release page refs; freed/evictable pages make room for the

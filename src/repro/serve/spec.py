@@ -1,0 +1,222 @@
+"""Speculative decoding for :class:`PagedEngine`: pluggable drafters,
+one batched verify dispatch, pinned-stream accept-prefix.
+
+A drafter proposes up to K cheap tokens per running lane; the target
+model scores all K+1 positions in **one** ``prefill_paged``-style
+dispatch (models/transformer.py ``verify_paged``) that also draws the
+pinned counter-keyed sample at every slot in-jit; the engine accepts
+the longest draft prefix matching those pinned draws.
+
+**Why prefix-match acceptance is exact here.** The serve sampling
+contract (serve/sampling.py) pins token ``n`` of a sequence to *one*
+deterministic draw: Gumbel-argmax under threefry key ``(seed, n)`` on
+that position's logits. Verify logits are bit-identical to decode
+logits in exact softmax mode (pinned by tests/test_spec_decode.py), so
+the pinned draw at verify slot ``i`` *is* the token non-speculative
+decode would emit at counter ``n + i`` — conditioned on the accepted
+prefix, which by induction matches the non-speculative stream. A draft
+token is accepted iff it equals that draw; the first mismatching slot
+emits the pinned draw itself as the correction, and a fully accepted
+draft emits slot K's draw as a bonus. Output streams are therefore
+bit-for-bit identical to plain decode for greedy *and* stochastic
+lanes — speculation changes only how many target dispatches it takes
+to produce them. (This is standard rejection sampling collapsed to its
+deterministic special case: given the pinned single-draw contract, the
+target "distribution" at each counter is a point mass, so accept-iff-
+equal preserves it exactly.) Discarded slots never advance the
+per-sequence counter: the engine advances the host stream by the kept
+count only, mirroring the decode-horizon finish contract.
+
+Drafters are duck-typed: anything with
+``propose(lanes, ks) -> per-lane token lists`` serves. Two ship here:
+
+* :class:`NGramDrafter` — model-free prompt-lookup drafting: propose
+  the continuation of the longest context suffix that re-occurred
+  earlier in the context. Free, surprisingly effective on repetitive
+  text, useless on noise.
+* :class:`DraftModelDrafter` — a small dense LM sharing the target's
+  tokenizer/vocab (e.g. a ``qwen2_0_5b``-class config next to a larger
+  target). Proposes through the lane's *own* pinned sampling contract
+  (``Sampler.draw`` at the exact counters verify will check), so a
+  draft model that approximates the target well lands on the pinned
+  draws even at temperature — acceptance degrades with model mismatch,
+  never with sampling noise.
+
+The per-sequence K controller (an EMA acceptance-rate policy that
+falls back to plain horizon decode when drafts stop paying) lives in
+``Scheduler.spec_ks`` / ``spec_feedback``; :class:`SpecConfig` carries
+its knobs plus the drafter.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence as Seq
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import api
+
+
+@dataclasses.dataclass
+class SpecConfig:
+    """Speculative-decoding policy: the drafter plus the controller
+    knobs the scheduler's per-sequence K policy runs on.
+
+    ``max_k`` is rounded to the next power of two at verify time (the
+    dispatch width ``C = K + 1`` stays a handful of compiled shapes).
+    A lane starts at ``max_k``; its EMA acceptance rate (weight
+    ``ema_alpha`` per verify round) halves K below ``demote_below``
+    and doubles it above ``promote_above``. At K = 0 the lane decodes
+    through the plain fused horizon path, then re-probes K = 1 after
+    ``retry_after`` rounds so a sequence whose tail turns predictable
+    can win speculation back.
+    """
+    drafter: object
+    max_k: int = 4
+    ema_alpha: float = 0.4
+    demote_below: float = 0.35
+    promote_above: float = 0.8
+    retry_after: int = 8
+
+    def __post_init__(self):
+        if self.max_k < 1:
+            raise ValueError(f"max_k must be >= 1, got {self.max_k}")
+        if not 0.0 <= self.demote_below <= self.promote_above <= 1.0:
+            raise ValueError(
+                "need 0 <= demote_below <= promote_above <= 1, got "
+                f"{self.demote_below}/{self.promote_above}")
+
+
+class NGramDrafter:
+    """Model-free prompt-lookup drafting.
+
+    For each lane, find the longest suffix (up to ``max_ngram`` tokens)
+    of ``prompt + out`` that occurred earlier in the context, most
+    recent occurrence first, and propose the k tokens that followed it.
+    No proposal when nothing matches — the lane verifies a single
+    position that round (plain decode through the verify path) and the
+    scheduler's EMA controller walks its K down to the horizon
+    fallback. The scan is O(context²) per lane per round: fine at the
+    serve scales this repo benches, swap in a suffix automaton before
+    pointing it at book-length contexts.
+    """
+
+    def __init__(self, max_ngram: int = 3, min_ngram: int = 1):
+        if not 1 <= min_ngram <= max_ngram:
+            raise ValueError(
+                f"need 1 <= min_ngram <= max_ngram, got "
+                f"{min_ngram}/{max_ngram}")
+        self.max_ngram = max_ngram
+        self.min_ngram = min_ngram
+
+    def propose(self, lanes: Seq[object], ks: Seq[int]) -> List[List[int]]:
+        return [self._match(np.concatenate(
+                    [s.prompt, np.asarray(s.out, np.int32)]), k)
+                for s, k in zip(lanes, ks)]
+
+    def _match(self, ctx: np.ndarray, k: int) -> List[int]:
+        if k <= 0:
+            return []
+        for n in range(min(self.max_ngram, len(ctx) - 1),
+                       self.min_ngram - 1, -1):
+            pat = ctx[-n:]
+            for s in range(len(ctx) - n - 1, -1, -1):
+                if np.array_equal(ctx[s:s + n], pat):
+                    cont = ctx[s + n:s + n + k]
+                    if len(cont):
+                        return [int(t) for t in cont]
+        return []
+
+
+class DraftModelDrafter:
+    """Draft-model proposals through the lane's pinned sampling stream.
+
+    Runs a small dense LM (same vocab as the target — validated by the
+    engine) over each lane's context tail and proposes the draw the
+    lane's own :class:`~repro.serve.sampling.Sampler` contract pins at
+    the counters verify will check (``Sampler.draw`` is non-mutating:
+    proposals never advance the stream). Draft steps are batched
+    across lanes — round ``i`` runs one forward over every lane still
+    drafting — with batch and width padded to powers of two so the
+    whole trace compiles a handful of shapes. Contexts are clipped to
+    the last ``window`` tokens (positions re-based to the window) and
+    right-padded: the model is causal, so padding past the real tail
+    never perturbs the logits the proposal reads.
+    """
+
+    def __init__(self, cfg: ArchConfig, params, *, window: int = 64):
+        if cfg.family != "dense":
+            raise ValueError(
+                f"DraftModelDrafter drafts with dense LMs, got {cfg.family}")
+        if window < 1:
+            raise ValueError(f"window must be >= 1, got {window}")
+        self.cfg = cfg
+        self.params = params
+        self.window = window
+        self.vocab_size = cfg.vocab_size
+        model = api.get_model(cfg)
+        self._fwd = jax.jit(
+            lambda p, t: model.forward(p, t, cfg, "serve"))
+
+    def propose(self, lanes: Seq[object], ks: Seq[int]) -> List[List[int]]:
+        drafts: List[List[int]] = [[] for _ in lanes]
+        kmax = max(ks, default=0)
+        if kmax <= 0:
+            return drafts
+        ctxs = [np.concatenate([s.prompt, np.asarray(s.out, np.int32)])
+                for s in lanes]
+        for i in range(kmax):
+            live = [j for j, k in enumerate(ks) if k > i]
+            if not live:
+                break
+            tails = [np.concatenate(
+                         [ctxs[j], np.asarray(drafts[j], np.int32)]
+                     )[-self.window:] for j in live]
+            w = 1 << (max(len(t) for t in tails) - 1).bit_length()
+            b = 1 << (len(live) - 1).bit_length()
+            toks = np.zeros((b, w), np.int32)
+            for r, t in enumerate(tails):
+                toks[r, :len(t)] = t
+            logits = np.asarray(self._fwd(self.params, jnp.asarray(toks)))
+            for r, j in enumerate(live):
+                seq = lanes[j]
+                row = logits[r, len(tails[r]) - 1]
+                drafts[j].append(
+                    seq.sampler.draw(row, len(seq.out) + i))
+        return drafts
+
+
+def spec_config_from_flag(flag: Optional[str], cfg: ArchConfig, *,
+                          max_k: int = 4, seed: int = 0,
+                          smoke: bool = False) -> Optional[SpecConfig]:
+    """Build a :class:`SpecConfig` from the CLI ``--spec-decode`` flag.
+
+    ``""``/None disables speculation; ``"ngram"`` is the model-free
+    drafter; ``"draft:<arch>"`` initialises a fresh draft model of that
+    config (``smoke`` shrinks it like the target; the draft must share
+    the target's vocab — checked here and again by the engine);
+    ``"draft"`` alone self-drafts with the target's own architecture.
+    """
+    if not flag:
+        return None
+    if flag == "ngram":
+        return SpecConfig(NGramDrafter(), max_k=max_k)
+    if flag == "draft" or flag.startswith("draft:"):
+        from repro.configs.base import get_config
+        name = (flag.split(":", 1)[1] if ":" in flag
+                else cfg.name.removesuffix("-smoke"))
+        dcfg = get_config(name)
+        if smoke:
+            dcfg = dcfg.smoke()
+        if dcfg.vocab_size != cfg.vocab_size:
+            raise ValueError(
+                f"draft vocab {dcfg.vocab_size} != target vocab "
+                f"{cfg.vocab_size}: speculation needs a shared tokenizer")
+        dparams, _ = api.init_params(jax.random.PRNGKey(seed + 1), dcfg)
+        return SpecConfig(DraftModelDrafter(dcfg, dparams), max_k=max_k)
+    raise ValueError(
+        f"unknown --spec-decode mode {flag!r} "
+        "(expected 'ngram', 'draft' or 'draft:<arch>')")
