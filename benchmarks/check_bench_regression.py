@@ -22,6 +22,11 @@ with ``paged``, found recursively) contributes its guarded metrics:
   ``(1 + max_drop)`` of baseline. The guard watches the step-based
   percentiles (deterministic) rather than the wall-ms ones (recorded
   for operators, too noisy to gate on).
+* **memory** (``weight_bytes_int8``, ``weight_bytes_ratio``): also
+  lower-is-better, collected from any node that records them (the
+  quantization section carries no engine label). Byte counts are
+  deterministic — a rise means int8 packing lost coverage of some
+  param tree leaf.
 
 Regression bounds apply to metrics present in **both** reports. The
 asymmetric cases split by direction: a metric newly recorded but
@@ -57,6 +62,12 @@ GUARDED_METRICS = ("tok_s", "agg_tok_s", "tokens_per_dispatch",
 # lower is better (latency percentiles): fail on a rise. Step-based =
 # deterministic; the *_ms twins are informational only.
 LATENCY_METRICS = ("ttft_p99_steps", "itl_p99_steps")
+# lower is better and fully deterministic (byte counts, not timings):
+# fail on a rise. Collected from *any* node that records them — the
+# quantization section carries no paged engine label. A rise in
+# weight_bytes_ratio means int8 packing silently lost coverage of some
+# param (e.g. a new projection landed unquantized).
+MEMORY_METRICS = ("weight_bytes_int8", "weight_bytes_ratio")
 
 
 def paged_metrics(node, path=""):
@@ -68,6 +79,9 @@ def paged_metrics(node, path=""):
             for metric in GUARDED_METRICS + LATENCY_METRICS:
                 if isinstance(node.get(metric), (int, float)):
                     found[(path, metric)] = float(node[metric])
+        for metric in MEMORY_METRICS:
+            if isinstance(node.get(metric), (int, float)):
+                found[(path, metric)] = float(node[metric])
         for k, v in node.items():
             found.update(paged_metrics(v, f"{path}/{k}"))
     return found
@@ -117,6 +131,11 @@ def main() -> int:
             # +1 step of absolute slack so a tiny baseline (p99 of 0-2
             # steps) isn't failed by one step of scheduling drift.
             ceiling = max(b * (1.0 + args.max_drop), b + 1.0)
+            bad = now > ceiling
+            bound = f"ceiling {ceiling:.2f}"
+        elif metric in MEMORY_METRICS:
+            # deterministic byte counts: no absolute slack needed.
+            ceiling = b * (1.0 + args.max_drop)
             bad = now > ceiling
             bound = f"ceiling {ceiling:.2f}"
         else:

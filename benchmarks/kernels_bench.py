@@ -21,7 +21,7 @@ import numpy as np
 
 from benchmarks.common import csv_row, time_call
 from repro import ops
-from repro.core.sole.quant import calibrate_ptf
+from repro.core.sole.quant import calibrate_ptf, quantize_act, quantize_weight
 from repro.kernels import ref as K
 from repro.kernels.ops import ailayernorm_op, e2softmax_op, flash_attention_op
 
@@ -103,6 +103,44 @@ def _latency_table(rng, quick: bool):
                    a, d, g, b, params=p_ln), x, r)
     rows.append(csv_row("latency/add_ln_fused_speedup", 0.0,
                         f"unfused_over_fused={un / max(fu, 1e-9):.2f}x"))
+
+    # int8 vs fp32 matmul — the w8a8 serve path's GEMM. Off-TPU the
+    # pallas column interprets its kernel body, so the portable signals
+    # are the reference int8 column (XLA int8 dot, exact int32
+    # accumulation) and the bytes-moved ratio; on TPU the same code
+    # times the blocked int8 kernel. reference and pallas w8a8 must
+    # agree bit for bit (same scale-application order) — asserted here.
+    m, kd, n = (64, 256, 128) if quick else (256, 2048, 512)
+    a = jnp.asarray(rng.normal(0, 1.5, (m, kd)).astype(np.float32))
+    w = jnp.asarray(rng.normal(0, 0.05, (kd, n)).astype(np.float32))
+    qa = quantize_act(a)
+    qw = quantize_weight(w)
+    mm_entries = []
+
+    def bench_mm(name, fn, *args):
+        jfn = jax.jit(fn)
+        us = time_call(jfn, *args, warmup=1, iters=iters)
+        mm_entries.append({"name": name, "us_per_call": round(us, 1),
+                           "shape": [m, kd, n]})
+        rows.append(csv_row(f"latency/{name}", us, f"shape={(m, kd, n)}"))
+        return us
+
+    f32 = bench_mm("matmul/f32", lambda u, v: u @ v, a, w)
+    bench_mm("matmul/w8a8_reference",
+             lambda u, s, v: ops.matmul_fn("w8a8", backend="reference")(
+                 (u, s), v), qa[0], qa[1], qw)
+    bench_mm("matmul/w8a8_pallas",
+             lambda u, s, v: ops.matmul_fn("w8a8", backend="pallas")(
+                 (u, s), v), qa[0], qa[1], qw)
+    out_ref = ops.matmul_fn("w8a8", backend="reference")(qa, qw)
+    out_pl = ops.matmul_fn("w8a8", backend="pallas")(qa, qw)
+    assert bool(jnp.all(out_ref == out_pl)), \
+        "reference and pallas w8a8 matmuls must agree bit for bit"
+    fp32_bytes = (m * kd + kd * n + m * n) * 4
+    int8_bytes = m * kd + kd * n + m * n * 4 + (m + n) * 4
+    rows.append(csv_row(
+        "latency/matmul_w8a8_bytes_moved", 0.0,
+        f"int8_over_fp32={int8_bytes / fp32_bytes:.3f}"))
     payload = {
         "note": ("interpret-mode pallas timings off-TPU measure the "
                  "Python kernel bodies, not the hardware; the reference "
@@ -112,6 +150,15 @@ def _latency_table(rng, quick: bool):
         "pallas_compiled": ops.pallas_compiles(),
         "entries": entries,
         "add_ln_unfused_over_fused": round(un / max(fu, 1e-9), 3),
+        "int8_matmul": {
+            "note": ("w8a8 GEMM at serve-path shapes; reference==pallas "
+                     "asserted bitwise. bytes_moved counts int8 operands "
+                     "+ fp32 output + per-channel/per-row scales"),
+            "entries": mm_entries,
+            "f32_us": round(f32, 1),
+            "bytes_moved_int8_over_fp32": round(int8_bytes / fp32_bytes,
+                                                3),
+        },
     }
     with open(BENCH_JSON, "w") as f:
         json.dump(payload, f, indent=2)

@@ -57,7 +57,7 @@ def _eval(params, cfg, shape, n_batches=4, seed=10_000):
     return float(np.mean(accs)), float(np.exp(np.mean(nlls)))
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, quantize: str = "w8a8"):
     base = get_config("qwen2_0_5b").smoke()
     base = dataclasses.replace(
         base, n_layers=2, d_model=128, n_heads=4, head_dim=32, d_ff=256,
@@ -80,6 +80,19 @@ def run(quick: bool = False):
         "fp32+ibert": (params, dataclasses.replace(
             base, softmax_mode="ibert", norm_mode="ibert")),
     }
+    # serve-path quantization (the real int8 dataflow, not fake-quant):
+    # per-channel int8 weights via R.quantize_params and — for w8a8 —
+    # per-token int8 activations through the registry matmuls; the
+    # fp32-trained model is evaluated as-is (no retraining, asserted).
+    if quantize != "off":
+        from repro.configs.base import QuantConfig
+        from repro.sharding import rules as R
+        p_q = R.quantize_params(params)
+        qc = QuantConfig(mode=quantize)
+        variants[quantize] = (
+            p_q, dataclasses.replace(train_cfg, quant=qc))
+        variants[f"{quantize}+sole"] = (
+            p_q, dataclasses.replace(base, quant=qc))
     results = {}
     for name, (p, cfg) in variants.items():
         acc, ppl = _eval(p, cfg, shape)
@@ -92,8 +105,22 @@ def run(quick: bool = False):
                         f"drop={drop_sole:.4f};paper_claims<0.009"))
     rows.append(csv_row("table2_nlp/acc_drop_int8_sole", 0.0,
                         f"drop={drop_int8:.4f};paper_claims<0.008"))
+    if quantize != "off":
+        drop_q = results["fp32"][0] - results[quantize][0]
+        rows.append(csv_row(
+            f"table2_nlp/acc_drop_fp32_{quantize}", 0.0,
+            f"drop={drop_q:.4f};tol<0.02"))
+        assert abs(drop_q) < 0.02, \
+            f"{quantize} must hold accuracy without retraining " \
+            f"(drop {drop_q:.4f})"
     return rows
 
 
 if __name__ == "__main__":
-    print("\n".join(run()))
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quantize", choices=("off", "w8a16", "w8a8"),
+                    default="w8a8")
+    ap.add_argument("--quick", action="store_true")
+    a = ap.parse_args()
+    print("\n".join(run(quick=a.quick, quantize=a.quantize)))

@@ -32,6 +32,39 @@ SHAPES = {
 
 
 @dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Serving-time quantization knob (SOLE W8A8 pipeline).
+
+    ``off``   — every matmul runs in the config dtype (bit-for-bit the
+                pre-quantization behavior; the default).
+    ``w8a16`` — weight-only: wq/wk/wv/wo, the MLP, and the LM head hold
+                per-output-channel symmetric int8 codes + fp32 scales;
+                activations stay in the config dtype (memory win only).
+    ``w8a8``  — w8a16 plus dynamic per-token int8 activations: the
+                residual-norm ops surface quantized activations that the
+                next matmul consumes through an int8 dot with exact
+                int32 accumulation, and E2Softmax's log2 probs hit the
+                int8 KV value pages without a dequantize pass.
+    """
+
+    mode: str = "off"   # off | w8a16 | w8a8
+
+    def __post_init__(self):
+        if self.mode not in ("off", "w8a16", "w8a8"):
+            raise ValueError(f"unknown quant mode {self.mode!r}")
+
+    @property
+    def weights(self) -> bool:
+        """int8 weights resident?"""
+        return self.mode in ("w8a16", "w8a8")
+
+    @property
+    def acts(self) -> bool:
+        """int8 activations flowing between ops?"""
+        return self.mode == "w8a8"
+
+
+@dataclasses.dataclass(frozen=True)
 class ArchConfig:
     name: str
     family: str                  # dense | moe | encdec | vlm | ssm | hybrid
@@ -83,6 +116,8 @@ class ArchConfig:
     # elsewhere; reference | pallas force one engine (mode semantics are
     # never changed by the backend, only the execution path).
     ops_backend: str = "auto"
+    # Serving-time quantization (off keeps fp paths bit-for-bit).
+    quant: QuantConfig = QuantConfig()
 
     # Numerics / performance
     dtype: str = "bfloat16"

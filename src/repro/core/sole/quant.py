@@ -92,6 +92,61 @@ class PTFQuantParams:
         return (q.astype(jnp.float32) - self.zero_point) * denom
 
 
+# ---------------------------------------------------------------------------
+# W8A8 serving pipeline primitives.
+#
+# Weights: per-output-channel symmetric int8 — the scale reduces over the
+# matmul's contraction axes (always the *leading* axes of every weight in
+# this repo: wq/wk/wv (d,h,k) contract d; wo (h,k,d) contracts (h,k);
+# gate/up/down/head (in,out) contract in), so the per-channel scale is a
+# constant along the contraction and can be applied once *after* the
+# int8 dot.
+#
+# Activations: dynamic per-token (per-row over the contracted trailing
+# axes) symmetric int8. Per-token granularity keeps every row's scale a
+# pure function of that row, which is what makes w8a8 decode outputs
+# invariant across decode horizons / verify chunk widths / mesh shapes:
+# the int8 x int8 dot accumulates in int32 (exact, order-independent)
+# and every fp factor is applied per-row after the reduction.
+# ---------------------------------------------------------------------------
+
+
+def is_qtensor(x) -> bool:
+    """A packed int8 weight: ``{"q": codes, "s": scale}`` and nothing else."""
+    return isinstance(x, dict) and set(x.keys()) == {"q", "s"}
+
+
+def quantize_weight(w: Array, n_contract: int = 1, *, offset: int = 0):
+    """Per-output-channel symmetric int8 over the ``n_contract``
+    contraction axes starting at ``offset`` (offset > 0 skips leading
+    stacking dims, e.g. the per-layer "layers" axis, so each layer gets
+    its own channel scales). Returns ``{"q": int8 codes, "s": fp32
+    scale}`` with the scale keeping the contraction axes as size-1
+    (broadcastable)."""
+    axes = tuple(range(offset, offset + n_contract))
+    amax = jnp.max(jnp.abs(w), axis=axes, keepdims=True)
+    scale = (jnp.where(amax > 0, amax, 1.0) / 127.0).astype(jnp.float32)
+    q = jnp.clip(jnp.round(w.astype(jnp.float32) / scale),
+                 -127, 127).astype(jnp.int8)
+    return {"q": q, "s": scale}
+
+
+def dequantize_weight(qw) -> Array:
+    return qw["q"].astype(jnp.float32) * qw["s"]
+
+
+def quantize_act(x: Array, n_contract: int = 1):
+    """Dynamic per-row symmetric int8 over the trailing ``n_contract``
+    axes. Returns ``(int8 codes, fp32 scale)``; the scale keeps the
+    reduced axes as size-1."""
+    axes = tuple(range(x.ndim - n_contract, x.ndim))
+    amax = jnp.max(jnp.abs(x), axis=axes, keepdims=True)
+    scale = (jnp.where(amax > 0, amax, 1.0) / 127.0).astype(jnp.float32)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
 def calibrate_ptf(x: Array, *, max_alpha: int = 3,
                   unsigned: bool = True) -> PTFQuantParams:
     """FQ-ViT-style PTF calibration over the last axis (channels).

@@ -243,6 +243,92 @@ def _fused_call(x, r, denom, alpha, gamma, beta, rms: bool,
     return h.reshape(shape), out.reshape(shape)
 
 
+def _quant_out(out):
+    """Dynamic per-row symmetric int8 of the normalized tile — the same
+    ops, in the same order, as ``core.sole.quant.quantize_act`` so the
+    in-kernel codes are bitwise equal to quantizing the fp32 norm
+    output after the fact."""
+    amax = jnp.max(jnp.abs(out), axis=-1, keepdims=True)
+    scale = jnp.where(amax > 0, amax, 1.0) / 127.0
+    q = jnp.clip(jnp.round(out / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _fused_q_kernel(x_ref, r_ref, denom_ref, alpha_ref, gamma_ref, beta_ref,
+                    sum_ref, q_ref, s_ref, *, rms: bool):
+    h = x_ref[...] + r_ref[...]                         # (br, C) fp32
+    sum_ref[...] = h
+    out = _quant_norm(h, denom_ref[...], alpha_ref[...],
+                      gamma_ref[...], beta_ref[...], rms)
+    q, scale = _quant_out(out)
+    q_ref[...] = q
+    s_ref[...] = scale
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("rms", "block_rows", "interpret"))
+def _fused_q_call(x, r, denom, alpha, gamma, beta, rms: bool,
+                  block_rows: int, interpret: bool):
+    shape = x.shape
+    c = shape[-1]
+    rows = _rows(shape)
+    x2 = x.reshape(rows, c).astype(jnp.float32)
+    r2 = r.reshape(rows, c).astype(jnp.float32)
+    br = min(block_rows, rows)
+    pad = (-rows) % br
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+        r2 = jnp.pad(r2, ((0, pad), (0, 0)))
+    blk = pl.BlockSpec((br, c), lambda i: (i, 0))
+    chan = pl.BlockSpec((1, c), lambda i: (0, 0))
+    h, q, s = pl.pallas_call(
+        functools.partial(_fused_q_kernel, rms=rms),
+        out_shape=(
+            jax.ShapeDtypeStruct(x2.shape, jnp.float32),
+            jax.ShapeDtypeStruct(x2.shape, jnp.int8),
+            jax.ShapeDtypeStruct((x2.shape[0], 1), jnp.float32),
+        ),
+        grid=((rows + pad) // br,),
+        in_specs=[blk, blk, chan, chan, chan, chan],
+        out_specs=(blk, blk, pl.BlockSpec((br, 1), lambda i: (i, 0))),
+        interpret=interpret,
+    )(x2, r2, denom.reshape(1, c).astype(jnp.float32),
+      alpha.reshape(1, c).astype(jnp.int32),
+      gamma.reshape(1, c).astype(jnp.float32),
+      beta.reshape(1, c).astype(jnp.float32))
+    if pad:
+        h, q, s = h[:rows], q[:rows], s[:rows]
+    return (h.reshape(shape), q.reshape(shape),
+            s.reshape(shape[:-1] + (1,)))
+
+
+def fused_add_norm_quant_pallas(x, r, gamma, beta=None, *,
+                                params: Optional[PTFQuantParams] = None,
+                                rms: bool = False, block_rows: int = 256,
+                                interpret: Optional[bool] = None):
+    """``fused_add_norm_pallas`` plus quantize-out: the normalized tile
+    leaves the kernel as dynamic per-row int8 codes + scale, ready for
+    the next W8A8 matmul — the fp32 norm output never reaches HBM.
+
+    Returns ``(h, (codes, scale))``. The codes are bitwise equal to
+    ``quantize_act(fused_add_norm_pallas(...)[1])`` — same per-row ops
+    on the same VMEM-resident fp32 tile.
+    """
+    from repro.core.sole.quant import quantize_act
+    if beta is None:
+        beta = jnp.zeros_like(gamma)
+    interp = resolve_interpret(interpret)
+    if params is None:
+        h = x + r
+        params = calibrate_ptf(h, unsigned=not rms)
+        out = _qnorm_call(h, _ptf_denom(params), params.alpha, gamma,
+                          beta, rms, block_rows, interp)
+        return h.astype(jnp.float32), quantize_act(out)
+    h, q, s = _fused_q_call(x, r, _ptf_denom(params), params.alpha, gamma,
+                            beta, rms, block_rows, interp)
+    return h, (q, s)
+
+
 def fused_add_norm_pallas(x, r, gamma, beta=None, *,
                           params: Optional[PTFQuantParams] = None,
                           rms: bool = False, block_rows: int = 256,

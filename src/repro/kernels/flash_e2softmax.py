@@ -187,7 +187,8 @@ def _paged_kernel(meta_ref, table_ref, kvmap_ref, q_ref, k_ref, v_ref,
                   o_ref, m_ref, s_ref, acc_ref, *, causal: bool, sole: bool,
                   exp_bits: int, int8_scale: Optional[float],
                   exact_corr: bool, scale: float, block_size: int,
-                  num_blocks: int, kv_scale: Optional[float]):
+                  num_blocks: int, kv_scale: Optional[float],
+                  quant_pv: bool):
     """Gather-by-page-table flash attention (one sequence per grid row).
 
     Grid (B, H, NB). The k/v BlockSpec index maps read the page id from
@@ -226,7 +227,13 @@ def _paged_kernel(meta_ref, table_ref, kvmap_ref, q_ref, k_ref, v_ref,
         v = v_ref[0, :, 0].astype(jnp.float32)
         if kv_scale is not None:                       # int8 page pools
             k = k * kv_scale
-            v = v * kv_scale
+            # quant_pv (W8A8): P·V accumulates the raw int8 V codes —
+            # E2Softmax's probs are powers of two, so this is the
+            # hardware shift-accumulate — and kv_scale (a power of two,
+            # so bit-exact to distribute) moves into the final per-row
+            # output scale.
+            if not quant_pv:
+                v = v * kv_scale
         logits = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32)        # (bq, bs)
@@ -250,12 +257,14 @@ def _paged_kernel(meta_ref, table_ref, kvmap_ref, q_ref, k_ref, v_ref,
     @pl.when(j == num_blocks - 1)
     def _final():
         scale_out = _final_scale(s_ref[...], sole=sole)
+        if quant_pv and kv_scale is not None:
+            scale_out = scale_out * kv_scale
         o_ref[0, 0] = acc_ref[...] * scale_out[:, None]
 
 
 @functools.partial(jax.jit, static_argnames=(
     "causal", "sole", "exp_bits", "int8_scale", "exact_corr", "interpret",
-    "kv_scale"))
+    "kv_scale", "quant_pv"))
 def flash_e2softmax_paged(q, k_pool, v_pool, tables, meta, *,
                           kv_head_map=None,
                           causal: bool = True, sole: bool = True,
@@ -263,7 +272,8 @@ def flash_e2softmax_paged(q, k_pool, v_pool, tables, meta, *,
                           int8_scale: Optional[float] = None,
                           exact_corr: bool = False,
                           interpret: Optional[bool] = None,
-                          kv_scale: Optional[float] = None):
+                          kv_scale: Optional[float] = None,
+                          quant_pv: bool = False):
     """Fused attention over a block-paged KV pool.
 
     Args:
@@ -315,7 +325,8 @@ def flash_e2softmax_paged(q, k_pool, v_pool, tables, meta, *,
     kern = functools.partial(
         _paged_kernel, causal=causal, sole=sole, exp_bits=exp_bits,
         int8_scale=int8_scale, exact_corr=exact_corr, scale=d ** -0.5,
-        block_size=bs, num_blocks=nb, kv_scale=kv_scale)
+        block_size=bs, num_blocks=nb, kv_scale=kv_scale,
+        quant_pv=quant_pv)
     return pl.pallas_call(
         kern,
         out_shape=jax.ShapeDtypeStruct((bsz, h, c, d), jnp.float32),
@@ -331,7 +342,8 @@ def flash_e2softmax_paged_decode(q, k_pool, v_pool, tables, ctx_lens, *,
                                  int8_scale: Optional[float] = None,
                                  exact_corr: bool = False,
                                  interpret: Optional[bool] = None,
-                                 kv_scale: Optional[float] = None):
+                                 kv_scale: Optional[float] = None,
+                                 quant_pv: bool = False):
     """Single-query decode fast path over the paged pool.
 
     q: (B, H, d) — the one live query per sequence; ctx_lens (B,) counts
@@ -345,5 +357,5 @@ def flash_e2softmax_paged_decode(q, k_pool, v_pool, tables, ctx_lens, *,
         q[:, :, None], k_pool, v_pool, tables, meta, causal=False,
         kv_head_map=kv_head_map, sole=sole, exp_bits=exp_bits,
         int8_scale=int8_scale, exact_corr=exact_corr, interpret=interpret,
-        kv_scale=kv_scale)
+        kv_scale=kv_scale, quant_pv=quant_pv)
     return out[:, :, 0]

@@ -106,6 +106,13 @@ def main() -> None:
                     help="repro.ops execution backend for softmax/norm/"
                          "attention (auto = pallas on TPU, reference "
                          "elsewhere)")
+    ap.add_argument("--quantize", choices=("off", "w8a16", "w8a8"),
+                    default="off",
+                    help="serve-path quantization: w8a16 packs every "
+                         "projection weight to per-channel int8; w8a8 "
+                         "additionally feeds the matmuls per-token int8 "
+                         "activations straight from the norm ops "
+                         "(off = bit-for-bit fp serving)")
     ap.add_argument("--mesh", default="",
                     help="comma-separated mesh shape over (data, model), "
                          "e.g. 1,8 — shards params and paged attention "
@@ -121,6 +128,9 @@ def main() -> None:
     if args.smoke:
         cfg = cfg.smoke()
     cfg = dataclasses.replace(cfg, ops_backend=args.ops_backend)
+    if args.quantize != "off":
+        from repro.configs.base import QuantConfig
+        cfg = dataclasses.replace(cfg, quant=QuantConfig(mode=args.quantize))
     if args.mesh:
         dims = tuple(int(x) for x in args.mesh.split(","))
         mesh = make_mesh(dims, ("data", "model")[:len(dims)])
@@ -218,7 +228,8 @@ def main() -> None:
     print(f"arch={cfg.name} engine={args.engine} requests={len(reqs)} "
           f"generated={total} tokens "
           f"in {dt:.2f}s ({total/dt:.1f} tok/s, softmax={cfg.softmax_mode}, "
-          f"norm={cfg.norm_mode}, ops_backend={cfg.ops_backend})")
+          f"norm={cfg.norm_mode}, ops_backend={cfg.ops_backend}, "
+          f"quant={cfg.quant.mode})")
     if args.engine == "paged":
         print("stats:", eng.stats())
     for o in outs[:2]:

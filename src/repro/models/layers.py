@@ -18,6 +18,7 @@ import jax.numpy as jnp
 from repro import ops
 from repro.configs.base import ArchConfig
 from repro.core.sole.e2softmax import aldivision, log2exp
+from repro.core.sole.quant import is_qtensor, quantize_act
 from repro.sharding.rules import constrain
 
 Array = jax.Array
@@ -80,6 +81,26 @@ def cast(x: Array, cfg: ArchConfig) -> Array:
     return x.astype(jnp.dtype(cfg.dtype))
 
 
+def qmatmul(x, w, cfg: ArchConfig, n_contract: int = 1) -> Array:
+    """Matmul against an int8 weight leaf (``{"q", "s"}`` dict from
+    sharding.rules.quantize_params).
+
+    ``x`` is either a plain activation — consumed as-is at w8a16, or
+    quantized per-token on the fly at w8a8 — or an ``(int8 codes,
+    per-token scale)`` pair surfaced by a ``residual_*_q`` norm, which
+    feeds the w8a8 matmul directly with no fp round trip. The on-the-fly
+    and fused activation paths are bit-identical by construction (the
+    reference ``residual_*_q`` *is* norm-then-``quantize_act``).
+    Returns fp32; call sites cast to the model dtype.
+    """
+    if isinstance(x, tuple):
+        return ops.matmul_fn("w8a8", cfg)(x, w, n_contract=n_contract)
+    if cfg.quant.acts:
+        qx = quantize_act(jnp.asarray(x, jnp.float32), n_contract)
+        return ops.matmul_fn("w8a8", cfg)(qx, w, n_contract=n_contract)
+    return ops.matmul_fn("w8a16", cfg)(x, w, n_contract=n_contract)
+
+
 # -- norms ------------------------------------------------------------------
 
 
@@ -105,7 +126,8 @@ def apply_norm(x: Array, p, cfg: ArchConfig, phase: str) -> Array:
 
 
 def apply_residual_norm(x: Array, r: Array, p, cfg: ArchConfig,
-                        phase: str) -> Tuple[Array, Array]:
+                        phase: str,
+                        quant_out: bool = False) -> Tuple[Array, Array]:
     """Fused ``x + r`` followed by norm: returns (new residual stream,
     normalized output), both cast to the model dtype.
 
@@ -113,8 +135,19 @@ def apply_residual_norm(x: Array, r: Array, p, cfg: ArchConfig,
     kernel (residual add + PTF quantize + AILayerNorm statistics +
     affine); otherwise it falls back to the unfused reference
     composition, bit-identical to writing ``x = x + r; apply_norm(x)``.
+
+    With ``quant_out`` (and w8a8 active) the ``residual_*_q`` twin runs
+    instead: the normalized output leaves as an ``(int8 codes, per-token
+    scale)`` pair that the next :func:`qmatmul` consumes directly.
     """
     mode = _norm_mode(cfg, phase)
+    if quant_out and cfg.quant.acts:
+        fn = ops.residual_norm_q_fn(cfg.norm_kind, mode, cfg)
+        if cfg.norm_kind == "layernorm":
+            s, out = fn(x, r, p["g"], p["b"])
+        else:
+            s, out = fn(x, r, p["g"])
+        return cast(s, cfg), out
     fn = ops.residual_norm_fn(cfg.norm_kind, mode, cfg)
     if cfg.norm_kind == "layernorm":
         s, out = fn(x, r, p["g"], p["b"])
@@ -142,7 +175,10 @@ def embed_tokens(p, tokens: Array, cfg: ArchConfig) -> Array:
 
 
 def lm_logits(p, x: Array, cfg: ArchConfig) -> Array:
-    logits = jnp.einsum("...d,dv->...v", x, cast(p["head"], cfg))
+    if is_qtensor(p["head"]):
+        logits = qmatmul(x, p["head"], cfg)
+    else:
+        logits = jnp.einsum("...d,dv->...v", x, cast(p["head"], cfg))
     return constrain(logits.astype(jnp.float32), "batch", "seq", "vocab")
 
 
@@ -207,18 +243,22 @@ def init_mlp(key, cfg: ArchConfig, d_ff: Optional[int] = None):
 
 def apply_mlp(x: Array, p, cfg: ArchConfig) -> Array:
     kind = cfg.mlp_kind
+    if is_qtensor(p["up"]):
+        mm = lambda a, w: cast(qmatmul(a, w, cfg), cfg)
+    else:
+        mm = lambda a, w: a @ cast(w, cfg)
     if kind == "swiglu":
-        h = jax.nn.silu(x @ cast(p["gate"], cfg)) * (x @ cast(p["up"], cfg))
+        h = jax.nn.silu(mm(x, p["gate"])) * mm(x, p["up"])
     elif kind == "geglu":
-        h = jax.nn.gelu(x @ cast(p["gate"], cfg)) * (x @ cast(p["up"], cfg))
+        h = jax.nn.gelu(mm(x, p["gate"])) * mm(x, p["up"])
     elif kind == "gelu":
-        h = jax.nn.gelu(x @ cast(p["up"], cfg))
+        h = jax.nn.gelu(mm(x, p["up"]))
     elif kind == "relu2":
-        h = jnp.square(jax.nn.relu(x @ cast(p["up"], cfg)))
+        h = jnp.square(jax.nn.relu(mm(x, p["up"])))
     else:
         raise ValueError(kind)
     h = constrain(h, "batch", "seq", "ff")
-    return h @ cast(p["down"], cfg)
+    return mm(h, p["down"])
 
 
 # -- attention ----------------------------------------------------------------
@@ -241,14 +281,26 @@ def init_attention(key, cfg: ArchConfig):
 
 
 def _project_qkv(p, x: Array, cfg: ArchConfig):
-    q = jnp.einsum("bsd,dhk->bshk", x, cast(p["wq"], cfg))
-    k = jnp.einsum("bsd,dhk->bshk", x, cast(p["wk"], cfg))
-    v = jnp.einsum("bsd,dhk->bshk", x, cast(p["wv"], cfg))
+    if is_qtensor(p["wq"]):
+        q = cast(qmatmul(x, p["wq"], cfg), cfg)
+        k = cast(qmatmul(x, p["wk"], cfg), cfg)
+        v = cast(qmatmul(x, p["wv"], cfg), cfg)
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, cast(p["wq"], cfg))
+        k = jnp.einsum("bsd,dhk->bshk", x, cast(p["wk"], cfg))
+        v = jnp.einsum("bsd,dhk->bshk", x, cast(p["wv"], cfg))
     if cfg.qkv_bias:
         q = q + cast(p["bq"], cfg)
         k = k + cast(p["bk"], cfg)
         v = v + cast(p["bv"], cfg)
     return q, k, v
+
+
+def _wo_proj(ctx: Array, p, cfg: ArchConfig) -> Array:
+    """Output projection ctx (B,S,H,hd) @ wo (H,hd,D) -> (B,S,D)."""
+    if is_qtensor(p["wo"]):
+        return cast(qmatmul(ctx, p["wo"], cfg, n_contract=2), cfg)
+    return jnp.einsum("bshk,hkd->bsd", ctx, cast(p["wo"], cfg))
 
 
 def _softmax_mode(cfg: ArchConfig, phase: str) -> str:
@@ -292,7 +344,9 @@ def attend_dense(q, k, v, q_pos, k_pos, cfg: ArchConfig, phase: str,
     v = _repeat_kv(v, h)
     qs = q * (hd ** -0.5)
     logits = jnp.einsum("bshd,bthd->bhst", qs, k).astype(jnp.float32)
-    mask = _mask(q_pos, k_pos, cfg, causal)          # (s, t)
+    mask = _mask(q_pos, k_pos, cfg, causal)          # (s, t) or (b, s, t)
+    if mask.ndim == 3:                               # per-lane positions
+        mask = mask[:, None]
     mask = jnp.broadcast_to(mask, logits.shape)
     mode = _softmax_mode(cfg, phase)
     if mode == "sole":
@@ -438,7 +492,7 @@ def apply_attention(p, x: Array, positions: Array, cfg: ArchConfig,
     fn = attend_blocked if impl == "blocked" else attend_dense
     ctx = fn(q, k, v, positions, positions, cfg, phase, causal=causal)
     ctx = constrain(ctx, "batch", "seq", "heads", "head_dim")
-    out = jnp.einsum("bshk,hkd->bsd", ctx, cast(p["wo"], cfg))
+    out = _wo_proj(ctx, p, cfg)
     return constrain(out, "batch", "seq", "embed")
 
 
@@ -458,7 +512,7 @@ def apply_attention_mrope(p, x, positions3, cfg: ArchConfig, phase: str):
     flat_pos = jnp.arange(s)
     fn = attend_blocked if impl == "blocked" else attend_dense
     ctx = fn(q, k, v, flat_pos, flat_pos, cfg, phase, causal=True)
-    out = jnp.einsum("bshk,hkd->bsd", ctx, cast(p["wo"], cfg))
+    out = _wo_proj(ctx, p, cfg)
     return constrain(out, "batch", "seq", "embed")
 
 
@@ -468,7 +522,10 @@ def apply_cross_attention(p, x, enc_kv, cfg: ArchConfig, phase: str,
 
     ``k_pos`` marks padded encoder positions with 2**30 (masked out).
     """
-    q = jnp.einsum("bsd,dhk->bshk", x, cast(p["wq"], cfg))
+    if is_qtensor(p["wq"]):
+        q = cast(qmatmul(x, p["wq"], cfg), cfg)
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, cast(p["wq"], cfg))
     if cfg.qkv_bias:
         q = q + cast(p["bq"], cfg)
     k, v = enc_kv
@@ -477,13 +534,17 @@ def apply_cross_attention(p, x, enc_kv, cfg: ArchConfig, phase: str,
         k_pos = jnp.arange(t)
     ctx = attend_dense(q, k, v, jnp.arange(s), k_pos, cfg, phase,
                        causal=False)
-    out = jnp.einsum("bshk,hkd->bsd", ctx, cast(p["wo"], cfg))
+    out = _wo_proj(ctx, p, cfg)
     return constrain(out, "batch", "seq", "embed")
 
 
 def cross_kv(p, enc_out: Array, cfg: ArchConfig):
-    k = jnp.einsum("btd,dhk->bthk", enc_out, cast(p["wk"], cfg))
-    v = jnp.einsum("btd,dhk->bthk", enc_out, cast(p["wv"], cfg))
+    if is_qtensor(p["wk"]):
+        k = cast(qmatmul(enc_out, p["wk"], cfg), cfg)
+        v = cast(qmatmul(enc_out, p["wv"], cfg), cfg)
+    else:
+        k = jnp.einsum("btd,dhk->bthk", enc_out, cast(p["wk"], cfg))
+        v = jnp.einsum("btd,dhk->bthk", enc_out, cast(p["wv"], cfg))
     if cfg.qkv_bias:
         k = k + cast(p["bk"], cfg)
         v = v + cast(p["bv"], cfg)
@@ -505,7 +566,7 @@ def _heads_sharded(cfg: ArchConfig) -> bool:
 
 def decode_attend_stacked(p, x1: Array, ck: Array, cv: Array, cpos: Array,
                           layer_idx: Array, pos: Array, cfg: ArchConfig,
-                          rope: bool = True, positions3=None
+                          rope: bool = True, positions3=None, slot=None
                           ) -> Tuple[Array, Array, Array]:
     """One-token attention against stacked *dot-layout-native* caches:
 
@@ -522,13 +583,13 @@ def decode_attend_stacked(p, x1: Array, ck: Array, cv: Array, cpos: Array,
     """
     q, k, v = _project_qkv(p, x1, cfg)
     if cfg.pos_kind == "rope" and rope:
-        q = apply_rope(q, pos[None], cfg)
-        k = apply_rope(k, pos[None], cfg)
+        rp = pos[:, None] if pos.ndim else pos[None]
+        q = apply_rope(q, rp, cfg)
+        k = apply_rope(k, rp, cfg)
     elif cfg.pos_kind == "mrope" and positions3 is not None:
         q = apply_mrope(q, positions3, cfg)
         k = apply_mrope(k, positions3, cfg)
     t = ck.shape[-1]
-    slot = jnp.mod(pos, t) if cfg.window else jnp.minimum(pos, t - 1)
     kl = kv_dequant(jax.lax.dynamic_index_in_dim(ck, layer_idx, 0, False),
                     cfg)                                  # (B,KV,hd,T)
     vl = kv_dequant(jax.lax.dynamic_index_in_dim(cv, layer_idx, 0, False),
@@ -538,10 +599,17 @@ def decode_attend_stacked(p, x1: Array, ck: Array, cv: Array, cpos: Array,
     g = h // kvh
     # cache validity: previously-written positions, in-window, and NOT the
     # current slot (its content is stale; the live token is column T+1).
-    valid = cpos <= pos
+    # ``pos``/``cpos`` may carry a per-lane batch dim (left-padded dense
+    # batches); everything is computed at (1|B, T) and broadcast.
+    cpos2 = cpos if cpos.ndim == 2 else cpos[None]        # (1|B, T)
+    pos2 = (pos if pos.ndim else pos[None])[:, None]      # (1|B, 1)
+    valid = cpos2 <= pos2
     if cfg.window:
-        valid &= (pos - cpos) < cfg.window
-    valid &= jnp.arange(t) != slot
+        valid &= (pos2 - cpos2) < cfg.window
+    if slot is None:      # legacy: physical column == logical position
+        slot = jnp.mod(pos, t) if cfg.window else jnp.minimum(pos, t - 1)
+    slot2 = (slot if slot.ndim else slot[None])[:, None]
+    valid &= jnp.arange(t)[None] != slot2
     mode = _softmax_mode(cfg, phase="serve")
     qg = (q * (hd ** -0.5)).reshape(b, kvh, g, hd)
     kc = k.reshape(b, kvh, 1, hd)                         # current token
@@ -552,7 +620,7 @@ def decode_attend_stacked(p, x1: Array, ck: Array, cv: Array, cpos: Array,
                          preferred_element_type=jnp.float32)
     logits = jnp.concatenate([logits_c, logit_s], axis=-1)  # (B,KV,g,T+1)
     mask = jnp.concatenate(
-        [jnp.broadcast_to(valid, (b, kvh, g, t)),
+        [jnp.broadcast_to(valid[:, None, None, :], (b, kvh, g, t)),
          jnp.ones((b, kvh, g, 1), bool)], axis=-1)
     if mode == "sole":
         m = jnp.max(jnp.where(mask, logits, -jnp.inf), -1, keepdims=True)
@@ -565,7 +633,7 @@ def decode_attend_stacked(p, x1: Array, ck: Array, cv: Array, cpos: Array,
     ctx = jnp.einsum("bkgt,bktd->bkgd", probs[..., :t], vl)
     ctx = ctx + probs[..., t:] * vc
     ctx = ctx.reshape(b, 1, h, hd)
-    out = jnp.einsum("bshk,hkd->bsd", ctx, cast(p["wo"], cfg))
+    out = _wo_proj(ctx, p, cfg)
     k_col = jnp.moveaxis(kv_quant(k, cfg), 1, 3)          # (B,KV,hd,1)
     v_row = jnp.moveaxis(kv_quant(v, cfg), 1, 2)          # (B,KV,1,hd)
     return out, k_col, v_row
@@ -585,19 +653,24 @@ def write_kv_columns(ck: Array, cv: Array, k_cols: Array, v_rows: Array,
 
 def pack_prefill_cache(k: Array, v: Array, positions: Array, t: int,
                        cfg: ArchConfig):
-    """Per-layer prefill K/V (B,S,KV,hd) -> dot-native ring buffers."""
+    """Per-layer prefill K/V (B,S,KV,hd) -> dot-native ring buffers.
+
+    ``positions`` is (S,) shared or (B, S) per-lane (left-padded dense
+    batches mark pad slots with 2**30); the stored ring mirrors its rank.
+    """
     s = k.shape[1]
     kk = k[:, -t:] if s >= t else jnp.pad(
         k, ((0, 0), (0, t - s), (0, 0), (0, 0)))
     vv = v[:, -t:] if s >= t else jnp.pad(
         v, ((0, 0), (0, t - s), (0, 0), (0, 0)))
-    pp = positions[-t:] if s >= t else jnp.pad(
-        positions, (0, t - s), constant_values=2**30)
+    pp = positions[..., -t:] if s >= t else jnp.pad(
+        positions, [(0, 0)] * (positions.ndim - 1) + [(0, t - s)],
+        constant_values=2**30)
     if cfg.window:
         shift = jnp.mod(s, t) if s >= t else 0
         kk = jnp.roll(kk, shift, axis=1)
         vv = jnp.roll(vv, shift, axis=1)
-        pp = jnp.roll(pp, shift, axis=0)
+        pp = jnp.roll(pp, shift, axis=-1)
     kq = jnp.transpose(kv_quant(kk, cfg), (0, 2, 3, 1))   # (B,KV,hd,T)
     vq = jnp.transpose(kv_quant(vv, cfg), (0, 2, 1, 3))   # (B,KV,T,hd)
     return kq, vq, pp.astype(jnp.int32)
@@ -643,7 +716,7 @@ def decode_attend(p, x1: Array, cache: Dict[str, Array], pos: Array,
     else:
         probs = ops.softmax_fn(mode, cfg)(logits, mask=mask)
     ctx = jnp.einsum("bhst,bthd->bshd", probs.astype(q.dtype), vf)
-    out = jnp.einsum("bshk,hkd->bsd", ctx, cast(p["wo"], cfg))
+    out = _wo_proj(ctx, p, cfg)
     return out, {"k": ck, "v": cv, "pos": cpos}
 
 
@@ -713,10 +786,15 @@ def paged_attend(q: Array, pool_k: Array, pool_v: Array, tables: Array,
     mode = _softmax_mode(cfg, phase="serve")
     sole = mode == "sole"
     fn = ops.paged_attention_fn(mode, cfg, backend)
+    kv_scale = _paged_kv_scale(cfg)
     kw = dict(causal=causal, exp_bits=cfg.exp_bits,
               int8_scale=(LOGIT_INT8_SCALE if sole and cfg.logit_int8
                           else None),
-              kv_scale=_paged_kv_scale(cfg))
+              kv_scale=kv_scale,
+              # w8a8: keep V as raw int8 codes through the PV contraction
+              # and fold kv_scale into the final per-row output scale —
+              # bit-exact (the scale is a power of two) and int8-dot-able.
+              quant_pv=bool(cfg.quant.acts and kv_scale is not None))
     from repro.sharding.rules import active_rules
     rules = active_rules()
     plan = None if rules is None else _paged_tp_plan(

@@ -219,11 +219,15 @@ def cache_axes(cfg: ArchConfig):
     return dense_axes(cfg)
 
 
-def prefill(params, tokens: Array, cfg: ArchConfig, cache_len: int):
+def prefill(params, tokens: Array, cfg: ArchConfig, cache_len: int,
+            n_pad=None):
     from repro.models.transformer import prefill as dense_prefill
-    return dense_prefill(params, tokens, cfg, cache_len, ffn_apply=_serve_ffn)
+    return dense_prefill(params, tokens, cfg, cache_len, ffn_apply=_serve_ffn,
+                         n_pad=n_pad)
 
 
-def decode_step(params, cache, token: Array, pos: Array, cfg: ArchConfig):
+def decode_step(params, cache, token: Array, pos: Array, cfg: ArchConfig,
+                write_pos=None):
     from repro.models.transformer import decode_step as dense_decode
-    return dense_decode(params, cache, token, pos, cfg, ffn_apply=_serve_ffn)
+    return dense_decode(params, cache, token, pos, cfg, ffn_apply=_serve_ffn,
+                        write_pos=write_pos)

@@ -99,11 +99,26 @@ def cache_axes(cfg: ArchConfig):
 
 
 def prefill(params, tokens: Array, cfg: ArchConfig, cache_len: int,
-            ffn_apply=None) -> Tuple[Array, Dict[str, Array]]:
-    """Run the full prompt, returning last-position logits + filled cache."""
+            ffn_apply=None, n_pad=None) -> Tuple[Array, Dict[str, Array]]:
+    """Run the full prompt, returning last-position logits + filled cache.
+
+    ``n_pad`` (B,) marks left-padding per lane: lane ``j``'s real tokens
+    occupy columns ``n_pad[j]..S-1`` at logical positions ``0..``. Pad
+    columns are masked out of every key set (stored position 2**30) and
+    RoPE sees the local positions, so a left-padded lane is bit-for-bit
+    the same computation (at its real rows) as serving the prompt alone.
+    ``n_pad=None`` keeps the legacy shared ``arange(S)`` positions.
+    """
     b, s = tokens.shape
     x = L.embed_tokens(params["embed"], tokens, cfg)
-    positions = jnp.arange(s)
+    if n_pad is None:
+        q_pos = k_pos = rope_pos = jnp.arange(s)
+    else:
+        local = jnp.arange(s)[None] - n_pad[:, None]      # (B, S)
+        k_pos = jnp.where(local < 0, 2**30, local)        # pads: masked keys
+        q_pos = rope_pos = jnp.maximum(local, 0)          # pad rows: garbage,
+        # but never all-masked (they see the lane's first real key), and
+        # pad keys are invalid so they never reach real rows.
     ffn_apply = ffn_apply or (lambda p, x, c, ph: L.apply_mlp(x, p, c))
     t = min(cache_len, cfg.window) if cfg.window else cache_len
 
@@ -111,17 +126,19 @@ def prefill(params, tokens: Array, cfg: ArchConfig, cache_len: int,
         h = L.apply_norm(x, lp["ln1"], cfg, "serve")
         q, k, v = L._project_qkv(lp["attn"], h, cfg)
         if cfg.pos_kind == "rope":
-            q = L.apply_rope(q, positions, cfg)
-            k = L.apply_rope(k, positions, cfg)
+            q = L.apply_rope(q, rope_pos, cfg)
+            k = L.apply_rope(k, rope_pos, cfg)
         impl = cfg.attn_impl
         if impl == "auto":
             impl = "blocked" if s >= 8192 else "dense"
+        if impl == "blocked" and n_pad is not None:
+            impl = "dense"      # blocked path is shared-positions only
         fn = L.attend_blocked if impl == "blocked" else L.attend_dense
-        ctx = fn(q, k, v, positions, positions, cfg, "serve", causal=cfg.causal)
-        attn_out = jnp.einsum("bshk,hkd->bsd", ctx, L.cast(lp["attn"]["wo"], cfg))
+        ctx = fn(q, k, v, q_pos, k_pos, cfg, "serve", causal=cfg.causal)
+        attn_out = L._wo_proj(ctx, lp["attn"], cfg)
         x, h = L.apply_residual_norm(x, attn_out, lp["ln2"], cfg, "serve")
         x = x + ffn_apply(lp["mlp"], h, cfg, "serve")
-        kq, vq, pp = L.pack_prefill_cache(k, v, positions, t, cfg)
+        kq, vq, pp = L.pack_prefill_cache(k, v, k_pos, t, cfg)
         cache_l = {"k": kq, "v": vq, "pos": pp}
         return constrain(x, "batch", "seq", "embed"), cache_l
 
@@ -133,8 +150,11 @@ def prefill(params, tokens: Array, cfg: ArchConfig, cache_len: int,
 
 
 def decode_step(params, cache, token: Array, pos: Array, cfg: ArchConfig,
-                ffn_apply=None) -> Tuple[Array, Dict[str, Array]]:
-    """One decode step. token (B,), pos scalar int32.
+                ffn_apply=None, write_pos=None
+                ) -> Tuple[Array, Dict[str, Array]]:
+    """One decode step. token (B,), pos scalar int32 — or (B,) per-lane
+    logical positions for left-padded batches, with ``write_pos`` the
+    shared scalar physical column (prompt length + step).
 
     The stacked dot-native caches are READ-ONLY inside the layer scan
     (no aliasing copies); each layer's new (k, v) column is emitted via
@@ -145,16 +165,23 @@ def decode_step(params, cache, token: Array, pos: Array, cfg: ArchConfig,
     x = L.embed_tokens(params["embed"], token[:, None], cfg)
     ffn_apply = ffn_apply or (lambda p, x, c, ph: L.apply_mlp(x, p, c))
     t = cache["k"].shape[-1]
-    slot = jnp.mod(pos, t) if cfg.window else jnp.minimum(pos, t - 1)
-    cpos = jax.lax.dynamic_update_index_in_dim(
-        cache["pos"], pos.astype(jnp.int32), slot, 0)
+    wp = pos if write_pos is None else write_pos
+    slot = jnp.mod(wp, t) if cfg.window else jnp.minimum(wp, t - 1)
+    if cache["pos"].ndim == 2:           # per-lane position ring (B, T)
+        col = jnp.broadcast_to(pos.astype(jnp.int32),
+                               (cache["pos"].shape[0],))[:, None]
+        cpos = jax.lax.dynamic_update_slice(
+            cache["pos"], col, (jnp.zeros((), slot.dtype), slot))
+    else:
+        cpos = jax.lax.dynamic_update_index_in_dim(
+            cache["pos"], pos.astype(jnp.int32), slot, 0)
     ck, cv = cache["k"], cache["v"]      # read-only inside the layer scan
 
     def layer(x, scanned):
         lp, idx = scanned
         h = L.apply_norm(x, lp["ln1"], cfg, "serve")
         attn_out, k_col, v_row = L.decode_attend_stacked(
-            lp["attn"], h, ck, cv, cpos, idx, pos, cfg)
+            lp["attn"], h, ck, cv, cpos, idx, pos, cfg, slot=slot)
         x, h = L.apply_residual_norm(x, attn_out, lp["ln2"], cfg, "serve")
         x = x + ffn_apply(lp["mlp"], h, cfg, "serve")
         return x, (k_col, v_row)
@@ -198,6 +225,16 @@ def _paged_forward(params, tokens, positions, n_valid, kv_len, tables,
     """
     from repro.serve.kv_cache import (PAGED_KV_AXES, slots_for_positions,
                                       write_tokens)
+    lay = params["layers"]
+    # w8a8 dataflow: residual norms whose consumer is a quantized matmul
+    # emit (int8 codes, scale) directly — the fused-output variant — so
+    # the activation never round-trips through fp between norm and GEMM.
+    # The FFN input is only quantized when the FFN is the stock dense MLP
+    # (a custom ffn_apply, e.g. MoE routing, expects fp activations).
+    qact = cfg.quant.acts and L.is_qtensor(lay["attn"]["wq"])
+    quant_ffn = (qact and ffn_apply is None
+                 and isinstance(lay.get("mlp"), dict)
+                 and L.is_qtensor(lay["mlp"].get("up")))
     ffn_apply = ffn_apply or (lambda p, x, c, ph: L.apply_mlp(x, p, c))
     x = L.embed_tokens(params["embed"], tokens, cfg)
     q_start = positions[:, 0]
@@ -219,7 +256,8 @@ def _paged_forward(params, tokens, positions, n_valid, kv_len, tables,
         if pending is None:
             h = L.apply_norm(x, lp["ln1"], cfg, "serve")
         else:
-            x, h = L.apply_residual_norm(x, pending, lp["ln1"], cfg, "serve")
+            x, h = L.apply_residual_norm(x, pending, lp["ln1"], cfg, "serve",
+                                         quant_out=qact)
         q, k, v = L._project_qkv(lp["attn"], h, cfg)
         if cfg.pos_kind == "rope":
             q = L.apply_rope(q, positions, cfg)
@@ -230,16 +268,16 @@ def _paged_forward(params, tokens, positions, n_valid, kv_len, tables,
                                        block_ids, offsets))
         ctx = L.paged_attend(q, pk[i], pv[i], tables, q_start, kv_len,
                              cfg, causal=causal, backend=backend)
-        attn_out = jnp.einsum("bshk,hkd->bsd", ctx,
-                              L.cast(lp["attn"]["wo"], cfg))
-        x, h = L.apply_residual_norm(x, attn_out, lp["ln2"], cfg, "serve")
+        attn_out = L._wo_proj(ctx, lp["attn"], cfg)
+        x, h = L.apply_residual_norm(x, attn_out, lp["ln2"], cfg, "serve",
+                                     quant_out=quant_ffn)
         x = constrain(x, "batch", "seq", "embed")
         pending = ffn_apply(lp["mlp"], h, cfg, "serve")
     if pending is None:
         x = L.apply_norm(x, params["final_norm"], cfg, "serve")
     else:
         _, x = L.apply_residual_norm(x, pending, params["final_norm"],
-                                     cfg, "serve")
+                                     cfg, "serve", quant_out=qact)
     logits = L.lm_logits(params["embed"], x, cfg)
     return logits, {"k": pk, "v": pv}
 

@@ -28,20 +28,21 @@ from __future__ import annotations
 from typing import Callable, Optional
 
 from repro.ops.interpret import pallas_compiles, resolve_interpret
-from repro.ops.registry import (ATTN_MODES, BACKENDS, MODES_BY_OP,
-                                NORM_MODES, OPS, SOFTMAX_MODES, backend_for,
-                                default_backend, is_registered, register,
-                                resolve)
+from repro.ops.registry import (ATTN_MODES, BACKENDS, MATMUL_MODES,
+                                MODES_BY_OP, NORM_MODES, OPS, SOFTMAX_MODES,
+                                backend_for, default_backend, is_registered,
+                                register, resolve)
 from repro.ops import reference  # registers the reference backend
 from repro.ops import pallas     # registers the pallas backend
 from repro.ops.reference import snap_logits
 
 __all__ = [
     "OPS", "BACKENDS", "SOFTMAX_MODES", "NORM_MODES", "ATTN_MODES",
-    "MODES_BY_OP", "register", "resolve", "is_registered", "backend_for",
-    "default_backend", "pallas_compiles", "resolve_interpret",
+    "MATMUL_MODES", "MODES_BY_OP", "register", "resolve", "is_registered",
+    "backend_for", "default_backend", "pallas_compiles", "resolve_interpret",
     "snap_logits", "softmax_fn", "layernorm_fn", "rmsnorm_fn",
-    "residual_norm_fn", "flash_attention_fn", "paged_attention_fn",
+    "residual_norm_fn", "residual_norm_q_fn", "matmul_fn",
+    "flash_attention_fn", "paged_attention_fn",
     "reference", "pallas",
 ]
 
@@ -75,6 +76,24 @@ def residual_norm_fn(kind: str, mode: str, cfg=None,
         raise ValueError(f"unknown norm kind {kind!r}")
     op = f"residual_{kind}"
     return resolve(op, mode, backend_for(cfg, op, mode, backend))
+
+
+def residual_norm_q_fn(kind: str, mode: str, cfg=None,
+                       backend: Optional[str] = None) -> Callable:
+    """(x, r, gamma[, beta]) -> (x + r, (int8 codes, per-row scale)) —
+    the residual_norm twin whose normalized output leaves as dynamic
+    per-token int8, feeding the next w8a8 matmul directly."""
+    if kind not in ("layernorm", "rmsnorm"):
+        raise ValueError(f"unknown norm kind {kind!r}")
+    op = f"residual_{kind}_q"
+    return resolve(op, mode, backend_for(cfg, op, mode, backend))
+
+
+def matmul_fn(mode: str, cfg=None,
+              backend: Optional[str] = None) -> Callable:
+    """(x, w, *, n_contract) serve-path matmul at the configured
+    quantization level (exact | w8a16 | w8a8)."""
+    return resolve("matmul", mode, backend_for(cfg, "matmul", mode, backend))
 
 
 def flash_attention_fn(mode: str, cfg=None,

@@ -65,6 +65,55 @@ def sole_residual_rmsnorm_pallas(x, r, gamma, beta=None, *, params=None,
                                  rms=True, interpret=interpret)
 
 
+@registry.register("residual_layernorm_q", "sole", "pallas")
+def sole_residual_layernorm_q_pallas(x, r, gamma, beta=None, *, params=None,
+                                     interpret: Optional[bool] = None, **kw):
+    """Fused residual-add + AILayerNorm + quantize-out: returns
+    ``(x + r, (int8 codes, per-row scale))`` for the next W8A8 matmul."""
+    from repro.kernels.ailayernorm import fused_add_norm_quant_pallas
+    return fused_add_norm_quant_pallas(x, r, gamma, beta, params=params,
+                                       rms=False, interpret=interpret)
+
+
+@registry.register("residual_rmsnorm_q", "sole", "pallas")
+def sole_residual_rmsnorm_q_pallas(x, r, gamma, beta=None, *, params=None,
+                                   interpret: Optional[bool] = None, **kw):
+    from repro.kernels.ailayernorm import fused_add_norm_quant_pallas
+    return fused_add_norm_quant_pallas(x, r, gamma, None, params=params,
+                                       rms=True, interpret=interpret)
+
+
+@registry.register("matmul", "w8a8", "pallas")
+def w8a8_matmul_pallas(x, w, *, n_contract: int = 1,
+                       interpret: Optional[bool] = None, **kw):
+    """int8 x int8 through the blocked MXU kernel. Contraction axes are
+    contiguous (activation trailing, weight leading), so both sides
+    flatten to 2D; scales apply per output element afterwards, exactly
+    as the reference twin does — the int32 accumulation is exact, so
+    the two backends agree bit-for-bit."""
+    from repro.kernels.int8_matmul import int8_matmul_pallas
+    q, sx = x
+    qw, sw = w["q"], w["s"]
+    batch = q.shape[:q.ndim - n_contract]
+    out_dims = qw.shape[n_contract:]
+    kdim = 1
+    for d in qw.shape[:n_contract]:
+        kdim *= d
+    ncols = 1
+    for d in out_dims:
+        ncols *= d
+    nrows = 1
+    for d in batch:
+        nrows *= d
+    acc = int8_matmul_pallas(q.reshape(nrows, kdim),
+                             qw.reshape(kdim, ncols),
+                             interpret=interpret)
+    acc = acc.reshape(batch + out_dims)
+    sx = sx.reshape(sx.shape[:-n_contract] + (1,) * len(out_dims))
+    return acc.astype(jnp.float32) * sx.astype(jnp.float32) \
+        * sw.reshape(sw.shape[n_contract:])
+
+
 def _flash_attention(sole: bool):
     def fn(q, k, v, *, causal: bool = True, exp_bits: int = 4,
            int8_scale: Optional[float] = None, block: int = 128,
@@ -86,7 +135,7 @@ registry.register("flash_attention", "sole", "pallas")(
 def _paged_attention(sole: bool):
     def fn(q, pool_k, pool_v, tables, q_start, kv_len, *, causal: bool,
            exp_bits: int = 4, int8_scale: Optional[float] = None,
-           kv_scale: Optional[float] = None,
+           kv_scale: Optional[float] = None, quant_pv: bool = False,
            kv_head_map=None, interpret: Optional[bool] = None, **kw):
         """Streams pages through the scalar-prefetch paged flash kernel —
         SOLE's online softmax in the serving hot loop. Layouts match the
@@ -100,7 +149,7 @@ def _paged_attention(sole: bool):
         ctx = flash_e2softmax_paged(
             jnp.moveaxis(q, 1, 2), pool_k, pool_v, tables, meta,
             causal=causal, sole=sole, exp_bits=exp_bits,
-            int8_scale=int8_scale, kv_scale=kv_scale,
+            int8_scale=int8_scale, kv_scale=kv_scale, quant_pv=quant_pv,
             kv_head_map=kv_head_map, interpret=interpret)
         return jnp.moveaxis(ctx, 1, 2).astype(q.dtype)
     return fn

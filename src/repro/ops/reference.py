@@ -112,6 +112,74 @@ for _mode in registry.NORM_MODES:
         _residual_norm(_mode, "rmsnorm"))
 
 
+# -- quantized matmul (SOLE W8A8 serving pipeline) ----------------------------
+#
+# Shape contract shared with the pallas backend: the activation's
+# trailing ``n_contract`` axes contract against the weight's *leading*
+# ``n_contract`` axes (every serve-path weight stores its contraction
+# first — see sharding.rules.QUANT_WEIGHT_SPEC), so both per-channel
+# weight scales (leading size-1 dims) and per-token activation scales
+# (trailing size-1 dims) apply once, after the reduction.
+
+
+def _wscale(w, n_contract: int):
+    """Per-channel scale reshaped to the output dims it broadcasts over."""
+    return w["s"].reshape(w["s"].shape[n_contract:])
+
+
+@registry.register("matmul", "exact", "reference")
+def exact_matmul(x, w, *, n_contract: int = 1, **kw):
+    """Plain tensordot in the incoming dtypes (the fp oracle)."""
+    return jnp.tensordot(x, w, n_contract)
+
+
+@registry.register("matmul", "w8a16", "reference")
+def w8a16_matmul(x, w, *, n_contract: int = 1, **kw):
+    """int8 weights x fp activations: contract the raw codes, apply the
+    per-channel scale once after (it is constant along the contraction)
+    — the dequantized weight is never materialized."""
+    out = jnp.tensordot(x, w["q"].astype(x.dtype), n_contract)
+    return out * _wscale(w, n_contract).astype(out.dtype)
+
+
+@registry.register("matmul", "w8a8", "reference")
+def w8a8_matmul(x, w, *, n_contract: int = 1, **kw):
+    """int8 x int8 with exact int32 accumulation.
+
+    ``x`` is a QAct pair ``(codes, per-row scale)`` from
+    ``core.sole.quant.quantize_act`` or a ``residual_*_q`` op. The int32
+    dot is order-independent, so w8a8 outputs are invariant across
+    decode horizons, verify chunk widths, and mesh shapes.
+    """
+    q, sx = x
+    acc = jnp.tensordot(q, w["q"], n_contract,
+                        preferred_element_type=jnp.int32)
+    n_out = w["q"].ndim - n_contract
+    sx = sx.reshape(sx.shape[:-n_contract] + (1,) * n_out)
+    return acc.astype(jnp.float32) * sx.astype(jnp.float32) \
+        * _wscale(w, n_contract)
+
+
+# -- residual + norm + quantize-out (feeds the next w8a8 matmul) --------------
+
+
+def _residual_norm_q(norm_mode: str, kind: str):
+    base = _residual_norm(norm_mode, kind)
+
+    def fn(x, r, gamma, beta=None, **kw):
+        from repro.core.sole.quant import quantize_act
+        s, out = base(x, r, gamma, beta, **kw)
+        return s, quantize_act(jnp.asarray(out, jnp.float32))
+    return fn
+
+
+for _mode in registry.NORM_MODES:
+    registry.register("residual_layernorm_q", _mode, "reference")(
+        _residual_norm_q(_mode, "layernorm"))
+    registry.register("residual_rmsnorm_q", _mode, "reference")(
+        _residual_norm_q(_mode, "rmsnorm"))
+
+
 # -- attention ----------------------------------------------------------------
 
 
@@ -158,7 +226,8 @@ def _paged_attention_ref(mode: str):
     def fn(q, pool_k, pool_v, tables, q_start, kv_len, *,
            causal: bool, exp_bits: int = 4,
            int8_scale: Optional[float] = None,
-           kv_scale: Optional[float] = None, kv_head_map=None, **kw):
+           kv_scale: Optional[float] = None, kv_head_map=None,
+           quant_pv: bool = False, **kw):
         """Gather pages to a contiguous cache, reuse the two-pass softmax
         path — the oracle for paged-vs-dense equivalence tests and the
         fallback for softmax modes the paged kernel does not implement.
@@ -168,14 +237,26 @@ def _paged_attention_ref(mode: str):
         ``kv_head_map`` (per-q-head pool KV-head index) overrides the
         contiguous-GQA repeat — used inside shard_map when q heads are
         sharded but the KV pool stays replicated.
+
+        ``quant_pv`` (W8A8 pipeline): the P·V contraction consumes the
+        *raw* int8 V codes — E2Softmax's probs are exact powers of two,
+        so the dot models the hardware shift-accumulate — and the single
+        ``kv_scale`` dequantize applies per row after the reduction.
+        Because ``kv_scale`` is a power of two, the result is bit-exact
+        vs the scale-then-dot order.
         """
         from repro.serve.kv_cache import gather_kv
         b, c, h, hd = q.shape
         k = gather_kv(pool_k, tables)                   # (B, T, KV, hd)
         v = gather_kv(pool_v, tables)
+        pv_scale = None
         if kv_scale is not None:                        # int8 page pools
             k = k.astype(q.dtype) * jnp.asarray(kv_scale, q.dtype)
-            v = v.astype(q.dtype) * jnp.asarray(kv_scale, q.dtype)
+            if quant_pv:
+                pv_scale = jnp.asarray(kv_scale, jnp.float32)
+                v = v.astype(q.dtype)
+            else:
+                v = v.astype(q.dtype) * jnp.asarray(kv_scale, q.dtype)
         t = k.shape[1]
         if kv_head_map is not None:
             kf = jnp.take(k.astype(q.dtype), kv_head_map, axis=2)
@@ -200,6 +281,8 @@ def _paged_attention_ref(mode: str):
             probs = registry.resolve("softmax", mode, "reference")(
                 logits, mask=mask)
         ctx = jnp.einsum("bhct,bthd->bchd", probs.astype(q.dtype), vf)
+        if pv_scale is not None:
+            ctx = ctx * pv_scale.astype(ctx.dtype)
         return ctx
     return fn
 

@@ -37,12 +37,17 @@ from typing import Callable, Dict, Optional, Tuple
 from repro.ops.interpret import pallas_compiles
 
 OPS = ("softmax", "layernorm", "rmsnorm", "residual_layernorm",
-       "residual_rmsnorm", "flash_attention", "paged_attention")
+       "residual_rmsnorm", "flash_attention", "paged_attention",
+       "matmul", "residual_layernorm_q", "residual_rmsnorm_q")
 BACKENDS = ("reference", "pallas")
 
 SOFTMAX_MODES = ("exact", "sole", "softermax", "ibert")
 NORM_MODES = ("exact", "sole", "ibert")
 ATTN_MODES = ("exact", "sole")
+# matmul modes are the serve-time quantization levels: exact = config
+# dtype, w8a16 = int8 weights x fp acts, w8a8 = int8 weights x int8 acts
+# with exact int32 accumulation.
+MATMUL_MODES = ("exact", "w8a16", "w8a8")
 
 MODES_BY_OP: Dict[str, Tuple[str, ...]] = {
     "softmax": SOFTMAX_MODES,
@@ -54,6 +59,12 @@ MODES_BY_OP: Dict[str, Tuple[str, ...]] = {
     # the paged reference path is the fallback for softmax modes the
     # paged kernel does not implement, so it spans all softmax modes.
     "paged_attention": SOFTMAX_MODES,
+    "matmul": MATMUL_MODES,
+    # *_q twins of the fused residual+norm ops additionally emit the
+    # normalized activations as dynamic per-token int8 codes + scale,
+    # ready for the next w8a8 matmul.
+    "residual_layernorm_q": NORM_MODES,
+    "residual_rmsnorm_q": NORM_MODES,
 }
 
 _REGISTRY: Dict[Tuple[str, str, str], Callable] = {}

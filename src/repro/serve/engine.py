@@ -123,6 +123,15 @@ class PagedEngine:
             raise ValueError(
                 f"decode_horizon must be >= 1, got {decode_horizon}")
         self.cfg = cfg
+        # w8a16/w8a8: pack every projection weight to int8 + per-channel
+        # fp scales *before* layout (the packed {"q","s"} leaves carry
+        # mirrored axes, so the sharding rules below still apply).
+        # quantize_params is idempotent — replica engines re-feeding an
+        # already-quantized tree pass through untouched.
+        if cfg.quant.weights:
+            params = R.quantize_params(params)
+            if param_axes is not None:
+                param_axes = R.quantize_param_axes(param_axes)
         # with a mesh + the logical-axes tree from api.init_params, lay
         # the weights out up front (heads/ff over model, divisibility
         # fallback per dim) instead of letting the first jitted step
@@ -601,19 +610,33 @@ class Engine:
         if cfg.family not in ("dense", "moe", "ssm", "hybrid"):
             raise ValueError(f"Engine serves LM families, got {cfg.family}")
         self.cfg = cfg
+        if cfg.quant.weights and cfg.family == "dense":
+            params = R.quantize_params(params)
         self.params = params
         self.batch = batch_size
         self.max_len = max_len
         self.rules = rules
         self.model = api.get_model(cfg)
+        # attention-cache families thread per-lane positions through
+        # prefill/decode so left-padded lanes mask their pad columns out
+        # of every key set; recurrent families (ssm/hybrid) keep the
+        # legacy shared positions.
+        self._lane_pos = cfg.family in ("dense", "moe")
         # why each request of the last generate() call stopped,
         # parallel to its returned outputs
         self.finish_reasons: List[str] = []
 
-        def _decode(params, cache, token, pos):
-            return self.model.decode_step(params, cache, token, pos, cfg)
+        def _decode(params, cache, token, pos, write_pos):
+            if self._lane_pos:
+                return self.model.decode_step(params, cache, token, pos,
+                                              cfg, write_pos=write_pos)
+            return self.model.decode_step(params, cache, token, write_pos,
+                                          cfg)
 
-        def _prefill_one(params, tokens):
+        def _prefill_one(params, tokens, n_pad):
+            if self._lane_pos:
+                return self.model.prefill(params, tokens, cfg, max_len,
+                                          n_pad=n_pad)
             return self.model.prefill(params, tokens, cfg, max_len)
 
         self._decode = jax.jit(_decode, donate_argnums=(1,))
@@ -663,9 +686,15 @@ class Engine:
         samplers = [sampler_for(r, self.cfg.vocab_size) for r in chunk]
         plen = max(len(r.prompt) for r in chunk)
         toks = np.zeros((b, plen), np.int32)
+        n_pad = np.zeros((b,), np.int32)
         for j, r in enumerate(chunk):
             toks[j, plen - len(r.prompt):] = r.prompt  # left-pad
-        logits, cache = self._prefill(self.params, jnp.asarray(toks))
+            n_pad[j] = plen - len(r.prompt)
+        # per-lane pad counts: pad columns are masked out of every key
+        # set and RoPE runs on local positions, so a short prompt in a
+        # mixed-length batch computes exactly what it would alone.
+        logits, cache = self._prefill(self.params, jnp.asarray(toks),
+                                      jnp.asarray(n_pad))
         rows = np.asarray(logits[:, -1])
         results: List[List[int]] = [[] for _ in range(b)]
         reasons: List[Optional[str]] = [None] * b
@@ -681,11 +710,16 @@ class Engine:
         token = jnp.asarray(np.array(
             [results[j][-1] if live(j) else 0 for j in range(b)], np.int32))
         max_new = max(r.max_new_tokens for r in chunk)
-        pos = plen
+        pos = plen                       # shared physical write column
         for _ in range(max_new - 1):
             if not any(live(j) for j in range(b)):
                 break                    # early exit: all lanes finished
+            # per-lane logical positions (pad-corrected); the write slot
+            # stays the shared physical column.
+            lane_pos = (jnp.asarray(pos - n_pad, jnp.int32)
+                        if self._lane_pos else None)
             logits, cache = self._decode(self.params, cache, token,
+                                         lane_pos,
                                          jnp.asarray(pos, jnp.int32))
             rows = np.asarray(logits)
             nxt = np.zeros((b,), np.int32)

@@ -183,6 +183,94 @@ def shard_params(params, axes_tree, rules: Optional[Rules]):
         params, axes_tree)
 
 
+# ---------------------------------------------------------------------------
+# Serving-time weight quantization (SOLE W8A8 pipeline).
+#
+# Matmul weights are packed as {"q": int8, "s": fp32 scale} leaves; the
+# scale reduces over each weight's contraction axes (leading, after any
+# "layers" stacking dim) so it applies once after the int8 dot. The
+# packed dict composes with shard_params: quantize_param_axes mirrors
+# the logical-axes tree ({"q": axes, "s": axes}) and the divisibility
+# fallback in Rules.dim_spec replicates the scale's size-1 contraction
+# dims while out dims (heads/ff/vocab) stay sharded like the codes.
+# ---------------------------------------------------------------------------
+
+# name -> (n_contract, base_ndim): every matmul weight in the serve path
+# contracts its *leading* base axes (wq/wk/wv (d,h,k) contract d; wo
+# (h,k,d) contracts (h,k); gate/up/down/head (in,out) contract in). A
+# leaf stacked with extra leading dims (per-layer "layers") quantizes
+# with offset = ndim - base_ndim so each layer gets its own scales.
+QUANT_WEIGHT_SPEC = {
+    "wq": (1, 3), "wk": (1, 3), "wv": (1, 3), "wo": (2, 3),
+    "gate": (1, 2), "up": (1, 2), "down": (1, 2), "head": (1, 2),
+}
+
+
+def _is_axes_leaf(v) -> bool:
+    return isinstance(v, tuple) and all(
+        a is None or isinstance(a, str) for a in v)
+
+
+def quantize_params(params):
+    """Pack the named matmul weights as per-channel int8 codes + scales.
+
+    Idempotent: already-packed ``{"q","s"}`` leaves pass through, so
+    engine replicas can re-feed a quantized tree. Non-matmul leaves
+    (embeddings, norms, biases, caches) are untouched.
+    """
+    from repro.core.sole import quant as Q
+
+    def walk(node):
+        if isinstance(node, dict):
+            if Q.is_qtensor(node):
+                return node
+            out = {}
+            for k, v in node.items():
+                spec = QUANT_WEIGHT_SPEC.get(k)
+                if (spec is not None and hasattr(v, "ndim")
+                        and v.ndim >= spec[1]):
+                    n, base = spec
+                    out[k] = Q.quantize_weight(v, n, offset=v.ndim - base)
+                else:
+                    out[k] = walk(v)
+            return out
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(v) for v in node)
+        return node
+
+    return walk(params)
+
+
+def quantize_param_axes(axes_tree):
+    """Mirror a logical-axes tree onto the packed-weight structure.
+
+    Each quantized leaf's axes tuple becomes ``{"q": axes, "s": axes}``
+    — the scale keeps the same logical names; its size-1 contraction
+    dims fall back to replicated via the divisibility rule.
+    """
+    def walk(node):
+        if isinstance(node, dict):
+            out = {}
+            for k, v in node.items():
+                if k in QUANT_WEIGHT_SPEC and _is_axes_leaf(v):
+                    out[k] = {"q": v, "s": v}
+                else:
+                    out[k] = walk(v)
+            return out
+        if isinstance(node, (list, tuple)) and not _is_axes_leaf(node):
+            return type(node)(walk(v) for v in node)
+        return node
+
+    return walk(axes_tree)
+
+
+def param_bytes(params) -> int:
+    """Total bytes resident across all param leaves (codes + scales)."""
+    return sum(int(v.size) * v.dtype.itemsize
+               for v in jax.tree.leaves(params)
+               if hasattr(v, "dtype"))
+
+
 def zero1_spec(spec: P, shape, rules: Rules, axis: str = "data") -> P:
     """ZeRO-1: additionally shard the largest unsharded dim over ``axis``.
 
