@@ -12,7 +12,12 @@ import numpy as np
 
 from benchmarks.common import csv_row
 from repro.core.sole.e2softmax import e2softmax
-from repro.kernels.ops import flash_attention_op
+from repro.ops import flash_attention_fn
+
+
+def flash_attention_op(q, k, v, *, sole=True, **kw):
+    return flash_attention_fn("sole" if sole else "exact",
+                              backend="pallas")(q, k, v, **kw)
 
 
 def run(quick: bool = False):

@@ -27,6 +27,13 @@ with ``paged``, found recursively) contributes its guarded metrics:
   quantization section carries no engine label). Byte counts are
   deterministic — a rise means int8 packing lost coverage of some
   param tree leaf.
+* **sanitizers** (``decode_compile_count``, ``transfers_in_decode``):
+  lower-is-better counters from the sanitized decode replay
+  (``repro.analysis.sanitizers``), collected label-free like the
+  memory metrics. ``transfers_in_decode`` baselines at 0, so any
+  implicit host<->device transfer entering the decode loop fails;
+  a ``decode_compile_count`` rise is a retrace leak past the pow2
+  padding discipline.
 
 Regression bounds apply to metrics present in **both** reports. The
 asymmetric cases split by direction: a metric newly recorded but
@@ -68,6 +75,16 @@ LATENCY_METRICS = ("ttft_p99_steps", "itl_p99_steps")
 # weight_bytes_ratio means int8 packing silently lost coverage of some
 # param (e.g. a new projection landed unquantized).
 MEMORY_METRICS = ("weight_bytes_int8", "weight_bytes_ratio")
+# lower is better and fully deterministic (compile/transfer counters
+# from the sanitized decode replay — repro.analysis.sanitizers): fail
+# on a rise. Collected label-free like the memory metrics (the
+# report's top-level sanitizers section carries no engine label, and
+# the per-run copy under the paged row is picked up by the engine
+# walk). transfers_in_decode has baseline 0, so *any* implicit
+# transfer sneaking into the decode loop fails the guard; a
+# decode_compile_count rise means the pow2 padding discipline leaked
+# a new traced shape into the warmed-up hot path.
+SANITIZER_METRICS = ("decode_compile_count", "transfers_in_decode")
 
 
 def paged_metrics(node, path=""):
@@ -79,7 +96,7 @@ def paged_metrics(node, path=""):
             for metric in GUARDED_METRICS + LATENCY_METRICS:
                 if isinstance(node.get(metric), (int, float)):
                     found[(path, metric)] = float(node[metric])
-        for metric in MEMORY_METRICS:
+        for metric in MEMORY_METRICS + SANITIZER_METRICS:
             if isinstance(node.get(metric), (int, float)):
                 found[(path, metric)] = float(node[metric])
         for k, v in node.items():
@@ -133,8 +150,10 @@ def main() -> int:
             ceiling = max(b * (1.0 + args.max_drop), b + 1.0)
             bad = now > ceiling
             bound = f"ceiling {ceiling:.2f}"
-        elif metric in MEMORY_METRICS:
-            # deterministic byte counts: no absolute slack needed.
+        elif metric in MEMORY_METRICS or metric in SANITIZER_METRICS:
+            # deterministic counts (bytes / compiles / transfers): no
+            # absolute slack needed. A zero baseline (transfers_in_
+            # decode) makes the ceiling 0 — any rise at all fails.
             ceiling = b * (1.0 + args.max_drop)
             bad = now > ceiling
             bound = f"ceiling {ceiling:.2f}"

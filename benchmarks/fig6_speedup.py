@@ -19,7 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import csv_row, time_call
-from repro.core.nonlin import layernorm_fn, softmax_fn
+from repro.ops import layernorm_fn, softmax_fn
 
 TOKENS = 785      # 448x448 DeiT-Tiny
 HEADS = 3

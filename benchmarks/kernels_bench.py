@@ -22,8 +22,16 @@ import numpy as np
 from benchmarks.common import csv_row, time_call
 from repro import ops
 from repro.core.sole.quant import calibrate_ptf, quantize_act, quantize_weight
-from repro.kernels import ref as K
-from repro.kernels.ops import ailayernorm_op, e2softmax_op, flash_attention_op
+from repro.ops import oracles as K
+
+e2softmax_op = ops.softmax_fn("sole", backend="pallas")
+ailayernorm_op = ops.layernorm_fn("sole", backend="pallas")
+
+
+def flash_attention_op(q, k, v, *, sole=True, **kw):
+    return ops.flash_attention_fn("sole" if sole else "exact",
+                                  backend="pallas")(q, k, v, **kw)
+
 
 BENCH_JSON = os.path.join(os.path.dirname(__file__), "BENCH_kernels.json")
 

@@ -10,7 +10,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import csv_row
-from repro.core.nonlin import layernorm_fn, softmax_fn
+from repro.ops import layernorm_fn, softmax_fn
 from repro.core.sole.ailayernorm import compressed_square
 
 

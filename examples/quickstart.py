@@ -6,9 +6,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.nonlin import layernorm_fn
+from repro import ops
 from repro.core.sole import calibrate_ptf, dynamic_compress, e2softmax
-from repro.kernels.ops import e2softmax_op, flash_attention_op
+
+layernorm_fn = ops.layernorm_fn
+e2softmax_op = ops.softmax_fn("sole", backend="pallas")
+
+
+def flash_attention_op(q, k, v, *, sole=True, **kw):
+    return ops.flash_attention_fn("sole" if sole else "exact",
+                                  backend="pallas")(q, k, v, **kw)
 
 rng = np.random.default_rng(0)
 

@@ -1,0 +1,22 @@
+"""``repro.analysis`` — repo-invariant static lints + runtime sanitizers.
+
+The SOLE reproduction's correctness story rests on a small set of
+repo-wide invariants (docs/ARCHITECTURE.md "Invariants"): every op
+resolves through the ``(op, mode, backend)`` registry, ``interpret`` is
+never hardcoded, PRNG draws in serve/ go through the counter-keyed
+sampling contract, and the decode hot loop never silently recompiles or
+syncs to host. This package enforces them:
+
+* :mod:`repro.analysis.lint` — a pure-stdlib AST linter
+  (``python -m repro.analysis.lint src tests benchmarks``) with rule
+  IDs ``RPR001``–``RPR006``; see docs/LINTS.md for the catalog and the
+  ``# repro: noqa RPR00x`` suppression syntax. It imports neither jax
+  nor repro code, so the CI lint job runs it with nothing but a Python
+  interpreter.
+* :mod:`repro.analysis.sanitizers` — runtime checks for the serve hot
+  loop: a recompile sentinel over the engine's jitted steps, a
+  ``jax.transfer_guard("disallow")`` context for decode, and a
+  page-refcount sweep every N engine steps. Activated opt-in via
+  ``REPRO_SANITIZE=1`` (tests/conftest.py) and by the serve benchmark's
+  sanitizer section.
+"""

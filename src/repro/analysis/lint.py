@@ -1,0 +1,563 @@
+"""Repo-invariant AST linter: ``python -m repro.analysis.lint <paths>``.
+
+Pure stdlib (``ast`` only — no jax, no repro imports), so the CI lint
+job runs it on a bare interpreter. Each rule guards one architectural
+invariant of this repo (docs/LINTS.md has the full catalog with
+rationale and examples):
+
+  RPR001  no ``repro.kernels.*`` / ``repro.core.nonlin`` imports
+          outside ``repro/ops/`` — every op resolves through the
+          ``(op, mode, backend)`` registry.
+  RPR002  no ``interpret=True`` / ``interpret=False`` literals outside
+          ``ops/interpret.py`` — the compiled/interpret decision is
+          platform autodetect, never hardcoded.
+  RPR003  no host-sync calls (``.item()``, ``np.asarray``/``np.array``,
+          ``float()`` on a traced argument, ``block_until_ready``,
+          ``jax.device_get``) inside functions reachable from
+          ``jax.jit`` / ``lax.scan`` bodies.
+  RPR004  no naked ``jax.random.PRNGKey`` / ``jax.random.split`` in
+          ``serve/`` (``serve/sampling.py`` exempt — it *is* the
+          pinned counter-keyed contract).
+  RPR005  no ``jax.jit`` applied to methods capturing ``self`` —
+          mutable-state capture bakes stale state into the trace.
+  RPR006  an argument donated via ``donate_argnums`` must not be read
+          again after the call until reassigned (use-after-donate).
+
+Suppression: append ``# repro: noqa`` (all rules) or
+``# repro: noqa RPR003`` (specific, comma/space separated) to the
+flagged line.
+
+The dataflow rules (RPR003/RPR006) are deliberately conservative and
+syntactic: RPR003 follows same-module calls by name from jit/scan
+roots; RPR006 checks the statements after a donating call inside its
+enclosing block, treating an exact-expression reassignment as the end
+of the hazard. Both err toward silence on code they cannot resolve —
+the runtime sanitizers (repro.analysis.sanitizers) backstop them.
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import dataclasses
+import os
+import re
+import sys
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+RULES = {
+    "RPR001": "kernels/nonlin import outside repro/ops "
+              "(use the repro.ops registry)",
+    "RPR002": "hardcoded interpret= literal (only ops/interpret.py decides)",
+    "RPR003": "host sync reachable from a jit/scan body",
+    "RPR004": "naked PRNG in serve/ (use the counter-keyed sampling "
+              "contract)",
+    "RPR005": "jax.jit over a method capturing self",
+    "RPR006": "donated argument read after donation",
+}
+
+_NOQA_RE = re.compile(r"#\s*repro:\s*noqa(?:\s+([A-Z0-9,\s]+?))?\s*(?:#|$)")
+
+# functions whose first (or body) argument is traced like a jit root
+_TRACE_ENTRY_ARGS = {
+    "jit": (0,), "scan": (0,), "while_loop": (0, 1), "fori_loop": (2,),
+    "shard_map": (0,), "pmap": (0,), "checkpoint": (0,), "remat": (0,),
+    "grad": (0,), "value_and_grad": (0,), "vmap": (0,),
+}
+_HOST_SYNC_CALLS = {
+    "np.asarray", "np.array", "numpy.asarray", "numpy.array",
+    "jax.device_get", "onp.asarray", "onp.array",
+}
+_HOST_SYNC_METHODS = {"item", "block_until_ready", "tolist"}
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    path: str
+    line: int
+    col: int
+    rule: str
+    msg: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule} {self.msg}"
+
+
+def _unparse(node: ast.AST) -> str:
+    try:
+        return ast.unparse(node)
+    except Exception:                    # pragma: no cover - defensive
+        return ""
+
+
+def _dotted(node: ast.AST) -> str:
+    """``a.b.c`` for Name/Attribute chains, "" otherwise."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _noqa_lines(src: str) -> Dict[int, Optional[Set[str]]]:
+    """{lineno: None (all rules) or {rule ids}} for suppression comments."""
+    out: Dict[int, Optional[Set[str]]] = {}
+    for i, line in enumerate(src.splitlines(), 1):
+        m = _NOQA_RE.search(line)
+        if not m:
+            continue
+        if m.group(1):
+            ids = {t.strip() for t in re.split(r"[,\s]+", m.group(1))
+                   if t.strip()}
+            out[i] = ids
+        else:
+            out[i] = None
+    return out
+
+
+def _pkg_rel(path: str) -> Optional[str]:
+    """Path relative to the ``repro`` package root, or None outside it."""
+    parts = path.replace(os.sep, "/").split("/")
+    if "repro" in parts:
+        return "/".join(parts[parts.index("repro"):])
+    return None
+
+
+class _FunctionIndex:
+    """Named function/lambda nodes of one module + same-module call
+    edges, for the RPR003 reachability walk."""
+
+    def __init__(self, tree: ast.Module):
+        self.by_name: Dict[str, List[ast.AST]] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self.by_name.setdefault(node.name, []).append(node)
+
+    def resolve(self, name: str) -> List[ast.AST]:
+        return self.by_name.get(name, [])
+
+
+def _trace_entry(call: ast.Call) -> Tuple[str, Sequence[int]]:
+    """(entry name, traced positional-arg indices) if ``call`` hands a
+    function to a jax tracing entry point, else ("", ())."""
+    name = _dotted(call.func)
+    leaf = name.rsplit(".", 1)[-1]
+    if leaf in _TRACE_ENTRY_ARGS and ("jax" in name or "lax" in name
+                                      or leaf in ("jit", "scan",
+                                                  "shard_map", "pmap")):
+        return leaf, _TRACE_ENTRY_ARGS[leaf]
+    # functools.partial(jax.jit, ...) used as a decorator factory
+    if leaf == "partial" and call.args:
+        inner = _dotted(call.args[0])
+        if inner.rsplit(".", 1)[-1] == "jit" and "jax" in inner:
+            return "jit", (1,)
+    return "", ()
+
+
+class FileLinter:
+    def __init__(self, path: str, display_path: str, src: str):
+        self.path = display_path
+        self.rel = _pkg_rel(display_path)
+        self.tree = ast.parse(src, filename=display_path)
+        self.noqa = _noqa_lines(src)
+        self.violations: List[Violation] = []
+
+    # -- plumbing -------------------------------------------------------------
+
+    def flag(self, node: ast.AST, rule: str, msg: str) -> None:
+        line = getattr(node, "lineno", 0)
+        sup = self.noqa.get(line, "unset")
+        if sup is None or (isinstance(sup, set) and rule in sup):
+            return
+        self.violations.append(
+            Violation(self.path, line, getattr(node, "col_offset", 0),
+                      rule, msg))
+
+    def _in_pkg(self, *prefixes: str) -> bool:
+        return self.rel is not None and any(
+            self.rel.startswith(p) for p in prefixes)
+
+    # -- rules ----------------------------------------------------------------
+
+    def run(self) -> List[Violation]:
+        self.rule_001()
+        self.rule_002()
+        self.rule_003()
+        self.rule_004()
+        self.rule_005()
+        self.rule_006()
+        return self.violations
+
+    def rule_001(self) -> None:
+        if self._in_pkg("repro/ops/", "repro/kernels/"):
+            return
+
+        def banned(mod: str) -> bool:
+            return (mod == "repro.kernels" or mod.startswith("repro.kernels.")
+                    or mod == "repro.core.nonlin")
+
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    if banned(alias.name):
+                        self.flag(node, "RPR001",
+                                  f"import of {alias.name!r} bypasses the "
+                                  "repro.ops registry")
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                mod = node.module
+                names = {a.name for a in node.names}
+                if banned(mod) or (
+                        mod == "repro.core" and "nonlin" in names) or (
+                        mod == "repro" and "kernels" in names):
+                    self.flag(node, "RPR001",
+                              f"import from {mod!r} bypasses the repro.ops "
+                              "registry")
+
+    def rule_002(self) -> None:
+        if self.rel is not None and self.rel.endswith("ops/interpret.py"):
+            return
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Call):
+                for kw in node.keywords:
+                    if kw.arg == "interpret" and isinstance(
+                            kw.value, ast.Constant) and isinstance(
+                            kw.value.value, bool):
+                        self.flag(kw.value, "RPR002",
+                                  f"interpret={kw.value.value} hardcodes the "
+                                  "lowering mode (pass interpret=None and "
+                                  "let ops.interpret resolve it)")
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                   ast.Lambda)):
+                a = node.args
+                for arg, default in list(zip(
+                        reversed(a.args + a.posonlyargs), reversed(a.defaults)
+                        )) + list(zip(a.kwonlyargs, a.kw_defaults)):
+                    if default is not None and arg.arg == "interpret" and \
+                            isinstance(default, ast.Constant) and \
+                            isinstance(default.value, bool):
+                        self.flag(default, "RPR002",
+                                  f"interpret defaults to {default.value} "
+                                  "(default must be None)")
+
+    def rule_003(self) -> None:
+        index = _FunctionIndex(self.tree)
+        roots: List[ast.AST] = []
+        for node in ast.walk(self.tree):
+            # decorators: @jax.jit / @partial(jax.jit, ...)
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for dec in node.decorator_list:
+                    target = dec.func if isinstance(dec, ast.Call) else dec
+                    name = _dotted(target)
+                    if name.rsplit(".", 1)[-1] == "jit" and "jax" in name:
+                        roots.append(node)
+                    elif isinstance(dec, ast.Call) and \
+                            _trace_entry(dec)[0] == "jit":
+                        roots.append(node)
+            if not isinstance(node, ast.Call):
+                continue
+            entry, arg_idx = _trace_entry(node)
+            if not entry:
+                continue
+            for i in arg_idx:
+                if i < len(node.args):
+                    fn = node.args[i]
+                    if isinstance(fn, ast.Name):
+                        roots.extend(index.resolve(fn.id))
+                    elif isinstance(fn, ast.Lambda):
+                        roots.append(fn)
+
+        # BFS over same-module call-by-name edges
+        reachable: List[ast.AST] = []
+        seen: Set[int] = set()
+        frontier = list(roots)
+        while frontier:
+            fn = frontier.pop()
+            if id(fn) in seen:
+                continue
+            seen.add(id(fn))
+            reachable.append(fn)
+            for node in ast.walk(fn):
+                if isinstance(node, ast.Call) and \
+                        isinstance(node.func, ast.Name):
+                    for callee in index.resolve(node.func.id):
+                        if id(callee) not in seen:
+                            frontier.append(callee)
+
+        flagged: Set[int] = set()
+        for fn in reachable:
+            # positional params only: tensors ride positionally, static
+            # config knobs (exp_bits=4, ...) ride keyword-only — float()
+            # on the latter is host math on python ints, not a sync.
+            params = set()
+            args = getattr(fn, "args", None)
+            if args is not None:
+                for a in (args.posonlyargs + args.args):
+                    params.add(a.arg)
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Call) or id(node) in flagged:
+                    continue
+                name = _dotted(node.func)
+                if isinstance(node.func, ast.Attribute) and \
+                        node.func.attr in _HOST_SYNC_METHODS:
+                    flagged.add(id(node))
+                    self.flag(node, "RPR003",
+                              f".{node.func.attr}() forces a host sync "
+                              "inside a traced function")
+                elif name in _HOST_SYNC_CALLS or \
+                        name.endswith(".block_until_ready"):
+                    flagged.add(id(node))
+                    self.flag(node, "RPR003",
+                              f"{name}() forces a host transfer inside a "
+                              "traced function")
+                elif name == "float" and node.args and any(
+                        isinstance(n, ast.Name) and n.id in params
+                        for n in ast.walk(node.args[0])):
+                    flagged.add(id(node))
+                    self.flag(node, "RPR003",
+                              "float() on a traced argument forces a host "
+                              "sync inside a traced function")
+
+    def rule_004(self) -> None:
+        if not self._in_pkg("repro/serve/"):
+            return
+        if self.rel.endswith("serve/sampling.py"):
+            return                       # the contract's one legitimate home
+        has_from_jax_random = any(
+            isinstance(n, ast.ImportFrom) and n.module == "jax"
+            and any(a.name == "random" for a in n.names)
+            for n in ast.walk(self.tree))
+        for node in ast.walk(self.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = _dotted(node.func)
+            if name in ("jax.random.PRNGKey", "jax.random.split") or (
+                    has_from_jax_random and
+                    name in ("random.PRNGKey", "random.split")):
+                self.flag(node, "RPR004",
+                          f"{name} in serve/ — sampling must go through "
+                          "the counter-keyed Sampler/sample_tokens "
+                          "contract (serve/sampling.py)")
+
+    def rule_005(self) -> None:
+        for node in ast.walk(self.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                args = node.args.posonlyargs + node.args.args
+                if not (args and args[0].arg == "self"):
+                    continue
+                for dec in node.decorator_list:
+                    target = dec.func if isinstance(dec, ast.Call) else dec
+                    name = _dotted(target)
+                    if (name.rsplit(".", 1)[-1] == "jit" and "jax" in name) \
+                            or (isinstance(dec, ast.Call)
+                                and _trace_entry(dec)[0] == "jit"):
+                        self.flag(node, "RPR005",
+                                  f"jax.jit over method {node.name!r} bakes "
+                                  "captured self state into the trace")
+            elif isinstance(node, ast.Call):
+                entry, arg_idx = _trace_entry(node)
+                if entry != "jit":
+                    continue
+                for i in arg_idx:
+                    if i < len(node.args) and isinstance(
+                            node.args[i], ast.Attribute):
+                        base = node.args[i].value
+                        if isinstance(base, ast.Name) and base.id == "self":
+                            self.flag(node, "RPR005",
+                                      "jax.jit over a bound method bakes "
+                                      "captured self state into the trace")
+
+    # -- RPR006: use-after-donate ---------------------------------------------
+
+    def _donation_map(self) -> Dict[str, Tuple[int, ...]]:
+        """{callee key: donated positions} from ``X = jax.jit(...,
+        donate_argnums=...)`` assignments anywhere in the module. Keys
+        are ``"name"`` for plain targets and ``"self.name"`` for
+        instance attributes."""
+        donations: Dict[str, Tuple[int, ...]] = {}
+        for node in ast.walk(self.tree):
+            if not (isinstance(node, ast.Assign)
+                    and isinstance(node.value, ast.Call)):
+                continue
+            name = _dotted(node.value.func)
+            if name.rsplit(".", 1)[-1] != "jit" or "jax" not in name:
+                continue
+            nums: Tuple[int, ...] = ()
+            for kw in node.value.keywords:
+                if kw.arg != "donate_argnums":
+                    continue
+                if isinstance(kw.value, ast.Constant) and isinstance(
+                        kw.value.value, int):
+                    nums = (kw.value.value,)
+                elif isinstance(kw.value, (ast.Tuple, ast.List)):
+                    nums = tuple(e.value for e in kw.value.elts
+                                 if isinstance(e, ast.Constant)
+                                 and isinstance(e.value, int))
+            if not nums:
+                continue
+            for tgt in node.targets:
+                key = _unparse(tgt)
+                if key:
+                    donations[key] = nums
+        return donations
+
+    @staticmethod
+    def _assign_targets(stmt: ast.stmt) -> List[str]:
+        """Unparsed exact targets (incl. tuple elements) this statement
+        rebinds."""
+        out: List[str] = []
+        if isinstance(stmt, ast.Assign):
+            for tgt in stmt.targets:
+                elts = tgt.elts if isinstance(
+                    tgt, (ast.Tuple, ast.List)) else [tgt]
+                out.extend(_unparse(e) for e in elts)
+        elif isinstance(stmt, (ast.AnnAssign,)) and stmt.value is not None:
+            out.append(_unparse(stmt.target))
+        return out
+
+    @staticmethod
+    def _reads(tree: ast.AST, expr: str) -> Optional[ast.AST]:
+        """First node whose exact unparse equals ``expr`` in load
+        context (a read of the donated value)."""
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.Attribute, ast.Name)) and \
+                    isinstance(getattr(node, "ctx", None), ast.Load) and \
+                    _unparse(node) == expr:
+                return node
+        return None
+
+    def _check_donated_call(self, stmts: List[ast.stmt], i: int,
+                            call: ast.Call, expr: str) -> None:
+        holder = stmts[i]
+        # reassigned within the same statement (e.g. ``x = f(x, ...)``
+        # or ``a, x = f(x, ...)``) ends the hazard immediately
+        if expr in self._assign_targets(holder):
+            return
+        # a reassignment anywhere later inside the same compound
+        # statement also counts (the nested-block visit re-checks its
+        # own ordering)
+        for node in ast.walk(holder):
+            if isinstance(node, ast.stmt) and node is not holder and \
+                    expr in self._assign_targets(node):
+                return
+        for stmt in stmts[i + 1:]:
+            read = self._reads(stmt, expr)
+            rebinds = expr in self._assign_targets(stmt) or any(
+                isinstance(n, ast.stmt) and expr in self._assign_targets(n)
+                for n in ast.walk(stmt))
+            if isinstance(stmt, ast.Assign) and rebinds:
+                # value is evaluated before the rebind
+                if stmt.value is not None and \
+                        self._reads(stmt.value, expr) is not None:
+                    self.flag(stmt, "RPR006",
+                              f"{expr!r} read after being donated to "
+                              f"{_dotted(call.func) or 'a jitted call'}()")
+                return
+            if read is not None:
+                self.flag(read, "RPR006",
+                          f"{expr!r} read after being donated to "
+                          f"{_dotted(call.func) or 'a jitted call'}() — "
+                          "reassign it from the call result first")
+                return
+            if rebinds:
+                return
+
+    def rule_006(self) -> None:
+        donations = self._donation_map()
+        if not donations:
+            return
+
+        def visit_block(stmts: List[ast.stmt]) -> None:
+            for i, stmt in enumerate(stmts):
+                # function/class bodies are separate execution scopes:
+                # their calls are checked against their *own* block by
+                # the recursion below, never against sibling statements
+                # of the enclosing block.
+                scoped = isinstance(stmt, (ast.FunctionDef,
+                                           ast.AsyncFunctionDef,
+                                           ast.ClassDef))
+                for node in ([] if scoped else ast.walk(stmt)):
+                    if not isinstance(node, ast.Call):
+                        continue
+                    key = _unparse(node.func)
+                    nums = donations.get(key)
+                    if not nums:
+                        continue
+                    for p in nums:
+                        if p >= len(node.args):
+                            continue
+                        arg = node.args[p]
+                        if not isinstance(arg, (ast.Name, ast.Attribute)):
+                            continue
+                        self._check_donated_call(stmts, i, node,
+                                                 _unparse(arg))
+                for attr in ("body", "orelse", "finalbody"):
+                    sub = getattr(stmt, attr, None)
+                    if isinstance(sub, list) and sub and \
+                            isinstance(sub[0], ast.stmt):
+                        visit_block(sub)
+                for handler in getattr(stmt, "handlers", []):
+                    visit_block(handler.body)
+
+        visit_block(self.tree.body)
+
+
+# -- driver -------------------------------------------------------------------
+
+
+def iter_py_files(paths: Iterable[str]) -> Iterable[str]:
+    for p in paths:
+        if os.path.isfile(p) and p.endswith(".py"):
+            yield p
+        elif os.path.isdir(p):
+            for root, dirs, files in os.walk(p):
+                dirs[:] = sorted(d for d in dirs if d != "__pycache__"
+                                 and not d.startswith("."))
+                for f in sorted(files):
+                    if f.endswith(".py"):
+                        yield os.path.join(root, f)
+
+
+def lint_source(src: str, path: str = "<snippet>") -> List[Violation]:
+    """Lint one source string (the unit-test entry point)."""
+    return FileLinter(path, path, src).run()
+
+
+def lint_paths(paths: Sequence[str]) -> List[Violation]:
+    out: List[Violation] = []
+    for path in iter_py_files(paths):
+        with open(path, encoding="utf-8") as f:
+            src = f.read()
+        try:
+            out.extend(FileLinter(path, os.path.relpath(path), src).run())
+        except SyntaxError as e:
+            out.append(Violation(os.path.relpath(path), e.lineno or 0, 0,
+                                 "RPR000", f"syntax error: {e.msg}"))
+    return out
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="repo-invariant linter (rules RPR001-RPR006; "
+                    "see docs/LINTS.md)")
+    ap.add_argument("paths", nargs="+", help="files or directories to lint")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalog and exit")
+    args = ap.parse_args(argv)
+    if args.list_rules:
+        for rule, desc in sorted(RULES.items()):
+            print(f"{rule}  {desc}")
+        return 0
+    violations = lint_paths(args.paths)
+    for v in sorted(violations, key=lambda v: (v.path, v.line, v.rule)):
+        print(v)
+    n = len(violations)
+    print(f"repro-lint: {n} violation{'s' if n != 1 else ''}"
+          if n else "repro-lint: clean")
+    return 1 if violations else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

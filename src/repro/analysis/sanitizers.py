@@ -1,0 +1,202 @@
+"""Runtime sanitizers for the serving hot loop.
+
+Three dynamic invariants back the static rules in ``analysis.lint``
+(catalogued in docs/LINTS.md); all are cheap enough to leave on in CI:
+
+* **Recompile sentinel** — every jitted engine step (``_prefill``,
+  ``_decode_h``, ``_verify``, ``_copy``) carries a *compile budget*
+  implied by the engine's pow2 padding discipline (horizons floored to
+  powers of two, eos widths pow2-rounded, three static sampling
+  flags). Exceeding the budget means some host value leaked into a
+  traced shape. After :meth:`EngineSanitizer.freeze` the budget drops
+  to zero growth: a warmed-up decode loop must never retrace.
+* **Transfer guard** — after ``freeze()``, engine steps run under
+  ``jax.transfer_guard("disallow")``: any *implicit* host<->device
+  transfer (device-array scalar indexing, python scalars riding into a
+  dispatch, ``float()`` on a tracer result) raises immediately.
+  Explicit ``np.asarray(whole_array)`` / ``jnp.asarray`` transfers —
+  the sanctioned d2h/h2d pattern — pass.
+* **Refcount sweep** — every ``sweep_every`` steps the paged KV
+  cache's ``check_refcounts()`` recounts page ownership from the
+  tables and compares against the incremental refcounts, catching COW
+  accounting drift long before it corrupts a lane.
+
+Enable in tests/CI with ``REPRO_SANITIZE=1`` (tests/conftest.py
+attaches a sanitizer to every :class:`~repro.serve.engine.PagedEngine`
+constructed); benchmarks/serve_throughput.py runs a
+warmup-freeze-guarded segment and records ``decode_compile_count`` /
+``transfers_in_decode`` into BENCH_serve.json.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+from typing import Callable, Dict, Optional
+
+__all__ = [
+    "sanitize_enabled", "RecompileError", "RecompileSentinel",
+    "default_budgets", "EngineSanitizer", "attach",
+]
+
+#: jitted step attributes the sentinel watches on an engine.
+ENGINE_STEP_FNS = ("_prefill", "_decode_h", "_verify", "_copy")
+
+
+def sanitize_enabled() -> bool:
+    """True when ``REPRO_SANITIZE`` is set to anything but ''/'0'."""
+    return os.environ.get("REPRO_SANITIZE", "0") not in ("", "0")
+
+
+class RecompileError(AssertionError):
+    """A jitted engine step compiled more variants than its budget."""
+
+
+class RecompileSentinel:
+    """Watches the jit caches of named callables against budgets.
+
+    jax's jitted wrappers expose ``_cache_size()`` — the number of
+    distinct (shape, dtype, static-arg) variants compiled so far.
+    ``check()`` raises :class:`RecompileError` when any watched fn
+    exceeds its budget, or grows at all after :meth:`freeze`.
+    """
+
+    def __init__(self, fns: Dict[str, Callable],
+                 budgets: Dict[str, int]):
+        for name, fn in fns.items():
+            if not hasattr(fn, "_cache_size"):
+                raise TypeError(
+                    f"{name} has no _cache_size(): not a jitted fn?")
+        self._fns = dict(fns)
+        self.budgets = dict(budgets)
+        self._frozen: Optional[Dict[str, int]] = None
+
+    def sizes(self) -> Dict[str, int]:
+        return {n: fn._cache_size() for n, fn in self._fns.items()}
+
+    @property
+    def frozen(self) -> bool:
+        return self._frozen is not None
+
+    def freeze(self) -> Dict[str, int]:
+        """Snapshot current cache sizes; any growth past the snapshot
+        is an error from now on (the zero-recompile decode regime)."""
+        self._frozen = self.sizes()
+        return dict(self._frozen)
+
+    def compile_count(self, name: str) -> int:
+        return self._fns[name]._cache_size() if name in self._fns else 0
+
+    def check(self) -> None:
+        for name, size in self.sizes().items():
+            if self._frozen is not None and size > self._frozen[name]:
+                raise RecompileError(
+                    f"{name} retraced after freeze(): {self._frozen[name]}"
+                    f" -> {size} compiled variants. A warmed-up decode"
+                    " loop must not recompile — some host value leaked"
+                    " into a traced shape or static arg.")
+            budget = self.budgets.get(name)
+            if budget is not None and size > budget:
+                raise RecompileError(
+                    f"{name} compiled {size} variants, budget {budget}."
+                    " The pow2 padding discipline (horizon floor, eos"
+                    " width, static sampling flags) bounds legitimate"
+                    " variant counts; exceeding it means an unpadded"
+                    " host value is feeding a traced shape.")
+
+
+def default_budgets(engine) -> Dict[str, int]:
+    """Compile budgets implied by the engine's padding discipline.
+
+    * ``_prefill``: chunk width is static -> one shape (headroom 2).
+    * ``_decode_h``: pow2-floored horizons give ``log2(H)+1`` scan
+      lengths x 8 static flag combos x pow2 eos widths.
+    * ``_verify``: pow2 verify widths C = K+1 x 8 flag combos x eos.
+    * ``_copy``: COW batches pad to pow2 counts <= num_blocks.
+    """
+    h = max(int(getattr(engine, "decode_horizon", 1)), 1)
+    nb = max(int(getattr(getattr(engine, "cache", None),
+                         "num_blocks", 1)), 1)
+    eos_widths = 4                     # pow2 eos table widths, generous
+    flag_combos = 8                    # use_top_k x stochastic x use_eos
+    return {
+        "_prefill": 2,
+        "_decode_h": h.bit_length() * flag_combos * eos_widths,
+        "_verify": (h.bit_length() + 2) * flag_combos * eos_widths,
+        "_copy": nb.bit_length() + 1,
+    }
+
+
+class EngineSanitizer:
+    """Wraps an engine's ``step`` with the three runtime sanitizers.
+
+    Attaching installs ``engine.step`` as an *instance attribute*
+    shadowing the bound method, so every driver — ``generate()``, the
+    async loop, external step loops — goes through the sanitized path
+    without engine changes. :meth:`detach` restores the original.
+
+    Lifecycle: steps run unguarded (compilation is legitimate) until
+    :meth:`freeze`; after that each step runs under
+    ``jax.transfer_guard("disallow")`` and asserts zero jit-cache
+    growth. Budget checks and the refcount sweep are always on.
+    """
+
+    def __init__(self, engine, *, sweep_every: int = 8,
+                 budgets: Optional[Dict[str, int]] = None,
+                 guard: bool = True):
+        self.engine = engine
+        fns = {n: getattr(engine, n) for n in ENGINE_STEP_FNS
+               if hasattr(engine, n)}
+        self.sentinel = RecompileSentinel(
+            fns, default_budgets(engine) if budgets is None else budgets)
+        self.sweep_every = sweep_every
+        self.guard = guard
+        self.steps = 0
+        self.sweeps = 0
+        # stays 0 by construction: an implicit transfer under the guard
+        # raises out of step() instead of incrementing a counter, so a
+        # run that completes certifies zero.
+        self.transfers_in_decode = 0
+        self._inner_step = engine.step
+        engine.step = self._step
+
+    def _guard_ctx(self):
+        if self.guard and self.sentinel.frozen:
+            import jax
+            return jax.transfer_guard("disallow")
+        return contextlib.nullcontext()
+
+    def _step(self) -> None:
+        with self._guard_ctx():
+            self._inner_step()
+        self.steps += 1
+        self.sentinel.check()
+        if self.sweep_every and self.steps % self.sweep_every == 0:
+            cache = getattr(self.engine, "cache", None)
+            if cache is not None and hasattr(cache, "check_refcounts"):
+                cache.check_refcounts()
+                self.sweeps += 1
+
+    def freeze(self) -> Dict[str, int]:
+        """Enter the guarded zero-recompile regime (call after warmup)."""
+        return self.sentinel.freeze()
+
+    def detach(self) -> None:
+        """Restore the engine's original bound ``step``."""
+        if self.engine.step == self._step:
+            del self.engine.step
+
+    def report(self) -> Dict[str, int]:
+        """Flat metrics for bench recording / assertions."""
+        sizes = self.sentinel.sizes()
+        return {
+            "decode_compile_count": sizes.get("_decode_h", 0),
+            "transfers_in_decode": self.transfers_in_decode,
+            "total_compile_count": sum(sizes.values()),
+            "sanitized_steps": self.steps,
+            "refcount_sweeps": self.sweeps,
+        }
+
+
+def attach(engine, **kw) -> EngineSanitizer:
+    """Attach an :class:`EngineSanitizer` to ``engine`` and return it."""
+    return EngineSanitizer(engine, **kw)

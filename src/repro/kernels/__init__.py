@@ -1,3 +1,5 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# Raw Pallas kernel bodies only (e2softmax / ailayernorm /
+# flash_e2softmax / int8_matmul). Everything above them — model-layout
+# adapters, GQA broadcast, oracles — lives in repro.ops; importing
+# repro.kernels outside repro/ops is a lint violation (RPR001), so the
+# registry stays the single resolution point for op implementations.

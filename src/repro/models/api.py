@@ -35,7 +35,15 @@ def get_model(cfg: ArchConfig):
 
 
 def init_params(rng, cfg: ArchConfig):
-    """Returns (param value tree, logical-axes tree)."""
+    """Returns (param value tree, logical-axes tree).
+
+    ``rng`` is a PRNG key, or a plain int seed — key construction lives
+    here so callers outside the sampling contract (serve/, notably)
+    never touch ``jax.random.PRNGKey`` themselves (lint rule RPR004).
+    """
+    import jax
+    if isinstance(rng, int):
+        rng = jax.random.PRNGKey(rng)
     from repro.models.layers import split_params
     return split_params(get_model(cfg).init(rng, cfg))
 

@@ -3,7 +3,9 @@
 The kernels and these references share the integer pipeline from
 ``repro.core.sole``; tests sweep shapes/dtypes and assert_allclose
 kernel-vs-oracle (exact for the integer codes, fp32-tolerance for the
-float accumulations).
+float accumulations). Relocated here from the pre-registry
+``repro.kernels.ref`` so everything callers need — registered ops *and*
+their oracles — lives under ``repro.ops`` (lint rule RPR001).
 """
 from __future__ import annotations
 

@@ -118,11 +118,25 @@ def _flash_attention(sole: bool):
     def fn(q, k, v, *, causal: bool = True, exp_bits: int = 4,
            int8_scale: Optional[float] = None, block: int = 128,
            interpret: Optional[bool] = None, exact_corr: bool = False):
-        from repro.kernels.ops import flash_attention_op
-        return flash_attention_op(q, k, v, causal=causal, sole=sole,
-                                  exp_bits=exp_bits, int8_scale=int8_scale,
-                                  block=block, interpret=interpret,
-                                  exact_corr=exact_corr)
+        """Fused attention in model layout: q (B,S,H,hd), k/v
+        (B,T,KV,hd) -> (B,S,H,hd). GQA broadcast + the (batch*heads)
+        layout fold happen here, so the kernel sees its native
+        single-head (BH, S, hd) layout."""
+        from repro.kernels.flash_e2softmax import flash_e2softmax_pallas
+        b, s, h, hd = q.shape
+        t, kv = k.shape[1], k.shape[2]
+        if kv != h:
+            k = jnp.repeat(k, h // kv, axis=2)
+            v = jnp.repeat(v, h // kv, axis=2)
+        qf = jnp.moveaxis(q, 2, 1).reshape(b * h, s, hd)
+        kf = jnp.moveaxis(k, 2, 1).reshape(b * h, t, hd)
+        vf = jnp.moveaxis(v, 2, 1).reshape(b * h, t, hd)
+        out = flash_e2softmax_pallas(
+            qf, kf, vf, causal=causal, sole=sole, exp_bits=exp_bits,
+            int8_scale=int8_scale, block_q=block, block_k=block,
+            interpret=interpret, exact_corr=exact_corr)
+        out = out.reshape(b, h, s, hd)
+        return jnp.moveaxis(out, 1, 2).astype(q.dtype)
     return fn
 
 

@@ -202,7 +202,7 @@ def _flash_attention_ref(sole: bool):
     def fn(q, k, v, *, causal: bool = True, exp_bits: int = 4,
            int8_scale: Optional[float] = None, **kw):
         """q (B,S,H,hd), k/v (B,T,KV,hd) -> (B,S,H,hd) fp32."""
-        from repro.kernels import ref as K
+        from repro.ops import oracles as K
         b, s, h, hd = q.shape
         t = k.shape[1]
         k = _repeat_kv(k, h)

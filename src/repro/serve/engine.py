@@ -217,9 +217,11 @@ class PagedEngine:
         while n < len(copies):
             n *= 2
         src, dst = zip(*(copies + [(0, 0)] * (n - len(copies))))
+        # stage through dtyped np arrays: list/tuple -> device counts as
+        # an implicit transfer under the decode-loop transfer guard.
         self.cache.pools = self._copy(self.cache.pools,
-                                      jnp.asarray(src, jnp.int32),
-                                      jnp.asarray(dst, jnp.int32))
+                                      jnp.asarray(np.array(src, np.int32)),
+                                      jnp.asarray(np.array(dst, np.int32)))
 
     # -- one engine iteration -------------------------------------------------
 
@@ -237,7 +239,8 @@ class PagedEngine:
         table = jnp.asarray(self.cache.batch_tables([seq.seq_id]))
         logits, pools = self._prefill(
             self.params, self.cache.pools, jnp.asarray(chunk),
-            jnp.asarray([start], jnp.int32), jnp.asarray([real], jnp.int32),
+            jnp.asarray(np.array([start], np.int32)),
+            jnp.asarray(np.array([real], np.int32)),
             table)
         self.cache.pools = pools
         seq.prefilled = start + real
@@ -248,7 +251,10 @@ class PagedEngine:
                 # fresh sequence: sample the first generated token from
                 # the last *real* prompt position's logits. A resumed
                 # sequence already holds its next feed token in out.
-                tok = seq.sampler(np.asarray(logits[0, real - 1]))
+                # whole-array d2h, then host indexing: indexing the
+                # device array first would transfer the index scalars
+                # h2d, tripping the decode-loop transfer guard.
+                tok = seq.sampler(np.asarray(logits)[0, real - 1])
                 # the very first token can already be a finish event
                 # (eos, or a single-token stop sequence): the sequence
                 # must never enter a decode batch.
@@ -695,7 +701,9 @@ class Engine:
         # mixed-length batch computes exactly what it would alone.
         logits, cache = self._prefill(self.params, jnp.asarray(toks),
                                       jnp.asarray(n_pad))
-        rows = np.asarray(logits[:, -1])
+        # whole-array d2h then host slicing (guard-safe: device-side
+        # basic indexing transfers the index scalars h2d).
+        rows = np.asarray(logits)[:, -1]
         results: List[List[int]] = [[] for _ in range(b)]
         reasons: List[Optional[str]] = [None] * b
         for j in range(b):

@@ -215,7 +215,9 @@ def spec_config_from_flag(flag: Optional[str], cfg: ArchConfig, *,
             raise ValueError(
                 f"draft vocab {dcfg.vocab_size} != target vocab "
                 f"{cfg.vocab_size}: speculation needs a shared tokenizer")
-        dparams, _ = api.init_params(jax.random.PRNGKey(seed + 1), dcfg)
+        # int seed: api.init_params builds the key — serve/ never
+        # constructs PRNG keys itself (RPR004)
+        dparams, _ = api.init_params(seed + 1, dcfg)
         return SpecConfig(DraftModelDrafter(dcfg, dparams), max_k=max_k)
     raise ValueError(
         f"unknown --spec-decode mode {flag!r} "

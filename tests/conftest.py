@@ -45,3 +45,36 @@ def _kv_refcount_leak_check(request, monkeypatch):
         cache = ref()
         if cache is not None:
             cache.check_refcounts()
+
+
+@pytest.fixture(autouse=True)
+def _engine_sanitizers(request, monkeypatch):
+    """Under ``REPRO_SANITIZE=1``, attach the runtime sanitizers
+    (repro.analysis.sanitizers) to every :class:`PagedEngine` a test
+    constructs: jit-cache budgets on the four jitted engine steps and
+    the periodic refcount sweep run on every ``step()``. A budget
+    violation — a recompile beyond what the pow2 padding discipline
+    allows — fails the test that caused it.
+
+    The post-freeze transfer guard stays off here (tests never declare
+    a warmup boundary); benchmarks/serve_throughput.py owns the
+    guarded zero-recompile leg. Opt out with
+    ``@pytest.mark.sanitize_exempt`` for tests that intentionally
+    provoke recompiles.
+    """
+    from repro.analysis.sanitizers import attach, sanitize_enabled
+
+    if (not sanitize_enabled()
+            or request.node.get_closest_marker("sanitize_exempt")):
+        yield
+        return
+    from repro.serve.engine import PagedEngine
+
+    orig_init = PagedEngine.__init__
+
+    def sanitizing_init(self, *args, **kwargs):
+        orig_init(self, *args, **kwargs)
+        attach(self, sweep_every=4)
+
+    monkeypatch.setattr(PagedEngine, "__init__", sanitizing_init)
+    yield

@@ -1,0 +1,418 @@
+"""repro.analysis: the RPR linter (per-rule positive + negative
+fixtures, suppression, the whole-repo lint-clean gate) and the runtime
+sanitizers (recompile sentinel, post-freeze transfer guard, refcount
+sweep) on live engines.
+
+The engine-level sanitizer tests mark themselves ``sanitize_exempt``:
+they attach their own sanitizers with exact expectations (deliberate
+recompiles, injected transfers), which the autouse REPRO_SANITIZE
+fixture's extra wrapper would distort.
+"""
+import dataclasses
+import os
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.lint import RULES, lint_paths, lint_source, main
+from repro.analysis.sanitizers import (RecompileError, RecompileSentinel,
+                                       attach, default_budgets,
+                                       sanitize_enabled)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def rules_of(src, path):
+    return [v.rule for v in lint_source(textwrap.dedent(src), path)]
+
+
+# -- RPR001: registry bypass ---------------------------------------------------
+
+
+def test_rpr001_flags_kernel_imports_outside_ops():
+    src = """
+        import repro.kernels.e2softmax
+        from repro.kernels import flash_e2softmax
+        from repro.core.nonlin import softmax_fn
+        from repro.core import nonlin
+        from repro import kernels
+    """
+    assert rules_of(src, "src/repro/serve/x.py") == ["RPR001"] * 5
+
+
+def test_rpr001_allows_ops_and_kernels_themselves():
+    src = """
+        from repro.kernels import flash_e2softmax
+        from repro.core.nonlin import softmax_fn
+    """
+    assert rules_of(src, "src/repro/ops/pallas.py") == []
+    assert rules_of(src, "src/repro/kernels/flash_e2softmax.py") == []
+
+
+def test_rpr001_allows_registry_imports():
+    src = """
+        from repro.ops import softmax_fn, flash_attention_fn
+        from repro.ops import oracles
+        from repro.core.sole.e2softmax import log2exp
+    """
+    assert rules_of(src, "src/repro/models/layers.py") == []
+
+
+# -- RPR002: hardcoded interpret= ----------------------------------------------
+
+
+def test_rpr002_flags_interpret_literals():
+    src = """
+        def f(x, *, interpret=True):
+            return kernel(x, interpret=False)
+    """
+    assert rules_of(src, "src/repro/models/layers.py") == ["RPR002"] * 2
+
+
+def test_rpr002_allows_none_and_forwarding():
+    src = """
+        def f(x, *, interpret=None):
+            return kernel(x, interpret=interpret)
+    """
+    assert rules_of(src, "src/repro/models/layers.py") == []
+
+
+def test_rpr002_exempts_interpret_module():
+    src = "probe = kernel(x, interpret=True)\n"
+    assert rules_of(src, "src/repro/ops/interpret.py") == []
+    assert rules_of(src, "src/repro/serve/x.py") == ["RPR002"]
+
+
+# -- RPR003: host sync inside traced code --------------------------------------
+
+
+def test_rpr003_flags_host_sync_in_jit_root():
+    src = """
+        import jax
+        import numpy as np
+
+        @jax.jit
+        def f(x):
+            return np.asarray(x).sum()
+    """
+    assert rules_of(src, "src/repro/models/x.py") == ["RPR003"]
+
+
+def test_rpr003_follows_same_module_calls():
+    src = """
+        import jax
+
+        def helper(x):
+            return x.item()
+
+        def body(carry, x):
+            return helper(carry), x
+
+        def run(xs):
+            return jax.lax.scan(body, 0.0, xs)
+    """
+    assert rules_of(src, "src/repro/models/x.py") == ["RPR003"]
+
+
+def test_rpr003_flags_float_on_positional_param_only():
+    src = """
+        import jax
+
+        @jax.jit
+        def f(x, *, exp_bits=4):
+            hi = float(2 ** exp_bits - 1)   # static config: fine
+            return x * hi + float(x[0])     # traced: flagged
+    """
+    assert rules_of(src, "src/repro/models/x.py") == ["RPR003"]
+
+
+def test_rpr003_ignores_untraced_functions():
+    src = """
+        import numpy as np
+
+        def host_loop(logits):
+            return np.asarray(logits)[0].item()
+    """
+    assert rules_of(src, "src/repro/serve/x.py") == []
+
+
+# -- RPR004: naked PRNG in serve/ ----------------------------------------------
+
+
+def test_rpr004_flags_prng_in_serve():
+    src = """
+        import jax
+
+        def sample(logits):
+            key = jax.random.PRNGKey(0)
+            a, b = jax.random.split(key)
+            return a
+    """
+    assert rules_of(src, "src/repro/serve/loop.py") == ["RPR004"] * 2
+
+
+def test_rpr004_exempts_sampling_contract_and_other_pkgs():
+    src = "key = jax.random.PRNGKey(0)\n"
+    assert rules_of(src, "src/repro/serve/sampling.py") == []
+    assert rules_of(src, "src/repro/models/api.py") == []
+
+
+# -- RPR005: jit over self-capturing methods -----------------------------------
+
+
+def test_rpr005_flags_jit_methods():
+    src = """
+        import jax
+
+        class Engine:
+            @jax.jit
+            def step(self, x):
+                return x
+
+            def build(self):
+                self._f = jax.jit(self.step)
+    """
+    assert rules_of(src, "src/repro/serve/x.py") == ["RPR005"] * 2
+
+
+def test_rpr005_allows_closures_over_locals():
+    src = """
+        import jax
+
+        class Engine:
+            def __init__(self, cfg):
+                def _step(params, pools):
+                    return pools
+                self._step = jax.jit(_step, donate_argnums=(1,))
+    """
+    assert rules_of(src, "src/repro/serve/x.py") == []
+
+
+# -- RPR006: use-after-donate --------------------------------------------------
+
+
+def test_rpr006_flags_read_after_donation():
+    src = """
+        import jax
+
+        step = jax.jit(lambda p, x: x, donate_argnums=(1,))
+
+        def run(params, pools):
+            logits = step(params, pools)
+            return pools
+    """
+    assert rules_of(src, "src/repro/serve/x.py") == ["RPR006"]
+
+
+def test_rpr006_reassignment_ends_hazard():
+    src = """
+        import jax
+
+        step = jax.jit(lambda p, x: x, donate_argnums=(1,))
+
+        def run(params, pools):
+            logits, pools = step(params, pools)
+            return pools
+    """
+    assert rules_of(src, "src/repro/serve/x.py") == []
+
+
+def test_rpr006_self_attribute_donation():
+    src = """
+        import jax
+
+        class Engine:
+            def __init__(self):
+                self._copy = jax.jit(lambda x, s: x, donate_argnums=(0,))
+
+            def bad(self, src):
+                out = self._copy(self.pools, src)
+                return self.pools
+
+            def good(self, src):
+                self.pools = self._copy(self.pools, src)
+                return self.pools
+    """
+    assert rules_of(src, "src/repro/serve/x.py") == ["RPR006"]
+
+
+# -- suppression / driver ------------------------------------------------------
+
+
+def test_noqa_suppression_specific_and_blanket():
+    base = "from repro.kernels import e2softmax{}\n"
+    path = "src/repro/serve/x.py"
+    assert rules_of(base.format(""), path) == ["RPR001"]
+    assert rules_of(base.format("  # repro: noqa RPR001"), path) == []
+    assert rules_of(base.format("  # repro: noqa"), path) == []
+    # suppressing a different rule does not silence RPR001
+    assert rules_of(base.format("  # repro: noqa RPR002"), path) == ["RPR001"]
+
+
+def test_violation_format_and_catalog():
+    v = lint_source("import repro.kernels.ops\n", "src/repro/serve/x.py")
+    assert len(v) == 1
+    s = str(v[0])
+    assert s.startswith("src/repro/serve/x.py:1:")
+    assert "RPR001" in s and v[0].rule in RULES
+
+
+def test_main_exit_codes(tmp_path, capsys):
+    bad = tmp_path / "bad.py"
+    bad.write_text("x = run(interpret=True)\n")
+    assert main([str(bad)]) == 1
+    assert "RPR002" in capsys.readouterr().out
+    good = tmp_path / "good.py"
+    good.write_text("x = 1\n")
+    assert main([str(good)]) == 0
+    assert "clean" in capsys.readouterr().out
+    assert main(["--list-rules", str(good)]) == 0
+
+
+def test_repo_is_lint_clean():
+    """The gating invariant: the whole repo passes its own linter."""
+    paths = [os.path.join(REPO, d)
+             for d in ("src", "tests", "benchmarks", "examples")]
+    violations = lint_paths(paths)
+    assert violations == [], "\n".join(str(v) for v in violations)
+
+
+# -- sanitizers: recompile sentinel (no engine needed) -------------------------
+
+
+def test_sentinel_budget_violation():
+    f = jax.jit(lambda x: x + 1)
+    s = RecompileSentinel({"f": f}, {"f": 1})
+    f(jnp.zeros(2))
+    s.check()
+    f(jnp.zeros(3))                      # second shape: over budget
+    with pytest.raises(RecompileError, match="budget"):
+        s.check()
+
+
+def test_sentinel_freeze_catches_any_growth():
+    f = jax.jit(lambda x: x * 2)
+    s = RecompileSentinel({"f": f}, {"f": 100})
+    f(jnp.zeros(2))
+    s.freeze()
+    s.check()                            # no growth: fine
+    f(jnp.zeros(3))
+    with pytest.raises(RecompileError, match="retraced after freeze"):
+        s.check()
+
+
+def test_sentinel_rejects_unjitted_fns():
+    with pytest.raises(TypeError, match="_cache_size"):
+        RecompileSentinel({"f": lambda x: x}, {})
+
+
+def test_sanitize_enabled_env(monkeypatch):
+    monkeypatch.delenv("REPRO_SANITIZE", raising=False)
+    assert not sanitize_enabled()
+    monkeypatch.setenv("REPRO_SANITIZE", "0")
+    assert not sanitize_enabled()
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    assert sanitize_enabled()
+
+
+# -- sanitizers: live engine ---------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def exact_lm():
+    from repro.configs.base import get_config
+    from repro.models import api
+
+    cfg = get_config("qwen2_0_5b").smoke()
+    params, _ = api.init_params(jax.random.PRNGKey(0), cfg)
+    cfg = dataclasses.replace(cfg, softmax_mode="exact", norm_mode="exact",
+                              logit_int8=False)
+    return cfg, params
+
+
+def _engine(cfg, params, **kw):
+    from repro.serve.engine import PagedEngine
+
+    base = dict(num_blocks=40, block_size=8, max_seq_len=64, max_running=4,
+                decode_batch=4, prefill_chunk=8, backend="pallas")
+    base.update(kw)
+    return PagedEngine(cfg, params, **base)
+
+
+def _reqs(cfg, n, seed=0, new=8):
+    from repro.serve.engine import Request
+
+    rng = np.random.default_rng(seed)
+    return [Request(prompt=rng.integers(0, cfg.vocab_size, size=16)
+                    .astype(np.int32), max_new_tokens=new)
+            for _ in range(n)]
+
+
+@pytest.mark.sanitize_exempt
+def test_engine_guarded_decode_is_clean(exact_lm):
+    """Warmup -> freeze -> guarded replay: the whole decode trace runs
+    under transfer_guard('disallow') with zero jit-cache growth."""
+    cfg, params = exact_lm
+    eng = _engine(cfg, params)
+    san = attach(eng, sweep_every=2)
+    eng.generate(_reqs(cfg, 3, seed=0))          # warmup: compiles
+    assert san.steps > 0
+    san.freeze()
+    out = eng.generate(_reqs(cfg, 3, seed=1))    # guarded: must be clean
+    assert [len(o) for o in out] == [8, 8, 8]
+    rep = san.report()
+    assert rep["transfers_in_decode"] == 0
+    assert rep["decode_compile_count"] >= 1
+    assert rep["refcount_sweeps"] > 0
+    budgets = default_budgets(eng)
+    assert rep["decode_compile_count"] <= budgets["_decode_h"]
+    san.detach()
+    from repro.serve.engine import PagedEngine
+    assert eng.step.__func__ is PagedEngine.step
+
+
+@pytest.mark.sanitize_exempt
+def test_engine_deliberate_recompile_caught(exact_lm):
+    """A post-freeze static-flag flip (eos lanes after an eos-free
+    warmup) retraces the decode scan — the sentinel must catch it."""
+    cfg, params = exact_lm
+    eng = _engine(cfg, params)
+    san = attach(eng, guard=False)       # unguarded: let the retrace land
+    eng.generate(_reqs(cfg, 2, seed=0))
+    san.freeze()
+    eos = [dataclasses.replace(r, eos_ids=(cfg.vocab_size - 1,))
+           for r in _reqs(cfg, 2, seed=2)]
+    with pytest.raises(RecompileError, match="retraced after freeze"):
+        eng.generate(eos)
+
+
+@pytest.mark.sanitize_exempt
+def test_engine_deliberate_transfer_caught(exact_lm):
+    """An implicit host->device transfer inside a guarded step raises
+    out of step() instead of silently syncing."""
+    cfg, params = exact_lm
+    eng = _engine(cfg, params)
+    san = attach(eng)
+    eng.generate(_reqs(cfg, 1, seed=0))
+    san.freeze()
+    san._inner_step = lambda: jnp.asarray([1, 2, 3])   # list -> device
+    with pytest.raises(Exception, match="[Dd]isallow"):
+        eng.step()
+
+
+@pytest.mark.sanitize_exempt
+@pytest.mark.kv_leak_exempt
+def test_engine_refcount_sweep_catches_corruption(exact_lm):
+    """The periodic sweep runs check_refcounts through step(): seeded
+    refcount drift fails the very next step."""
+    cfg, params = exact_lm
+    eng = _engine(cfg, params)
+    san = attach(eng, sweep_every=1)
+    eng.generate(_reqs(cfg, 1, seed=0))
+    assert san.sweeps == san.steps
+    eng.cache._ref[1] += 1               # deliberate accounting drift
+    with pytest.raises(AssertionError):
+        eng.step()

@@ -1,12 +1,26 @@
-"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret=True)."""
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret
+autodetects to the Python kernel bodies on CPU).
+
+Kernel entry points resolve through the ``repro.ops`` registry — the
+legacy ``repro.kernels.ops`` wrappers are gone. The raw-kernel parity
+tests below import kernel modules directly (``# repro: noqa RPR001``):
+they exist precisely to pin the layer *below* the registry.
+"""
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import ops
 from repro.core.sole.quant import calibrate_ptf
-from repro.kernels import ref as K
-from repro.kernels.ops import (ailayernorm_op, e2softmax_op,
-                               flash_attention_op)
+from repro.ops import oracles as K
+
+e2softmax_op = ops.softmax_fn("sole", backend="pallas")
+ailayernorm_op = ops.layernorm_fn("sole", backend="pallas")
+
+
+def flash_attention_op(q, k, v, *, sole=True, **kw):
+    return ops.flash_attention_fn("sole" if sole else "exact",
+                                  backend="pallas")(q, k, v, **kw)
 
 
 @pytest.mark.parametrize("shape", [(4, 64), (3, 5, 130), (1, 1000), (7, 257)])
@@ -89,7 +103,8 @@ def test_flash_sole_multiblock_close(rng, kv_heads, block):
 @pytest.mark.parametrize("causal", [True, False])
 def test_flash_rectangular_and_ragged_shapes(rng, shape, causal):
     """Parity on S != T and non-multiple-of-block shapes (exact mode)."""
-    from repro.kernels.flash_e2softmax import flash_e2softmax_pallas
+    from repro.kernels.flash_e2softmax import (  # repro: noqa RPR001
+        flash_e2softmax_pallas)
     s, t = shape
     bh, hd = 4, 16
     q = jnp.asarray(rng.normal(0, 1, (bh, s, hd)).astype(np.float32))
@@ -105,7 +120,8 @@ def test_flash_rectangular_and_ragged_shapes(rng, shape, causal):
 def test_flash_sole_ragged_single_block_bit_exact(rng):
     """Non-multiple shape padded into one block still reduces to the
     two-pass reference exactly (padding is fully masked)."""
-    from repro.kernels.flash_e2softmax import flash_e2softmax_pallas
+    from repro.kernels.flash_e2softmax import (  # repro: noqa RPR001
+        flash_e2softmax_pallas)
     bh, s, hd = 4, 57, 16
     q, k, v = (jnp.asarray(rng.normal(0, 1, (bh, s, hd)).astype(np.float32))
                for _ in range(3))
@@ -130,7 +146,8 @@ def _gather(pool, table, t):
 @pytest.mark.parametrize("ctx", [5, 11, 16])
 def test_paged_decode_matches_gathered_ref(rng, ctx):
     """flash_e2softmax_paged_decode == gather + two-pass ref (exact)."""
-    from repro.kernels.flash_e2softmax import flash_e2softmax_paged_decode
+    from repro.kernels.flash_e2softmax import (  # repro: noqa RPR001
+        flash_e2softmax_paged_decode)
     n, bs, kv, hd, h, b = 12, 4, 2, 16, 4, 3
     kp, vp = _page_pool(rng, n, bs, kv, hd)
     tables = np.array([[3, 1, 6, 2], [5, 2, 7, 9], [10, 4, 8, 11]], np.int32)
@@ -154,7 +171,8 @@ def test_paged_decode_matches_gathered_ref(rng, ctx):
 def test_paged_decode_sole_single_page_bit_exact(rng):
     """Context inside one page: the online paged pipeline reduces to the
     two-pass E2Softmax reference exactly."""
-    from repro.kernels.flash_e2softmax import flash_e2softmax_paged_decode
+    from repro.kernels.flash_e2softmax import (  # repro: noqa RPR001
+        flash_e2softmax_paged_decode)
     n, bs, kv, hd, h = 8, 16, 2, 16, 4
     kp, vp = _page_pool(rng, n, bs, kv, hd)
     tables = np.array([[3, 0], [5, 0]], np.int32)
@@ -177,7 +195,8 @@ def test_paged_decode_sole_single_page_bit_exact(rng):
 def test_paged_prefill_chunk_matches_gathered_ref(rng):
     """Causal chunk attention through page tables == contiguous ref with
     the chunk's rows offset by q_start (exact mode)."""
-    from repro.kernels.flash_e2softmax import flash_e2softmax_paged
+    from repro.kernels.flash_e2softmax import (  # repro: noqa RPR001
+        flash_e2softmax_paged)
     n, bs, kv, hd, h, c, q0 = 12, 4, 2, 16, 4, 8, 6
     kp, vp = _page_pool(rng, n, bs, kv, hd)
     table = np.array([[3, 1, 6, 2]], np.int32)
@@ -203,7 +222,8 @@ def test_paged_prefill_chunk_matches_gathered_ref(rng):
 
 def test_paged_int8_pool_dequant(rng):
     """int8 page pools dequantize inside the kernel via kv_scale."""
-    from repro.kernels.flash_e2softmax import flash_e2softmax_paged_decode
+    from repro.kernels.flash_e2softmax import (  # repro: noqa RPR001
+        flash_e2softmax_paged_decode)
     from repro.models.layers import KV_INT8_SCALE
     n, bs, kv, hd, h = 8, 8, 2, 16, 4
     kp, vp = _page_pool(rng, n, bs, kv, hd)

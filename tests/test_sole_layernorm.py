@@ -4,7 +4,7 @@ import numpy as np
 import pytest
 from tests._hypothesis_compat import given, settings, st
 
-from repro.core.nonlin import layernorm_fn, rmsnorm_fn
+from repro.ops import layernorm_fn, rmsnorm_fn
 from repro.core.sole.ailayernorm import (ailayernorm, compressed_square,
                                          dynamic_compress, rsqrt_lut)
 from repro.core.sole.quant import calibrate_ptf

@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 from tests._hypothesis_compat import given, settings, st
 
-from repro.core.nonlin import softmax_fn
+from repro.ops import softmax_fn
 from repro.core.sole.e2softmax import (aldivision, e2softmax,
                                        e2softmax_online, log2exp, pack_e2,
                                        unpack_e2)
