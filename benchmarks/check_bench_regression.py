@@ -73,8 +73,12 @@ LATENCY_METRICS = ("ttft_p99_steps", "itl_p99_steps")
 # fail on a rise. Collected from *any* node that records them — the
 # quantization section carries no paged engine label. A rise in
 # weight_bytes_ratio means int8 packing silently lost coverage of some
-# param (e.g. a new projection landed unquantized).
-MEMORY_METRICS = ("weight_bytes_int8", "weight_bytes_ratio")
+# param (e.g. a new projection landed unquantized); a rise in a
+# multiarch row's state_bytes_per_token means a family's sequence
+# state grew (a recurrent slot leaking onto the page pool, or a pool
+# layout regression).
+MEMORY_METRICS = ("weight_bytes_int8", "weight_bytes_ratio",
+                  "state_bytes_per_token")
 # lower is better and fully deterministic (compile/transfer counters
 # from the sanitized decode replay — repro.analysis.sanitizers): fail
 # on a rise. Collected label-free like the memory metrics (the

@@ -47,6 +47,15 @@ Poisson traces (inter-arrival times measured in engine steps):
                      run sharded engines in XLA_FLAGS subprocesses
                      (1x1 / 1x2 / 2x2) with a bitwise cross-shape
                      output digest in exact modes;
+  * multiarch rows  — every non-dense family (moe, ssm, hybrid,
+                      encdec) served through the SAME engine/scheduler
+                      queue (this PR's claim: one paged-sequence-state
+                      stack serves every architecture; per-family
+                      tok/s plus ``state_bytes_per_token`` — the
+                      deterministic, guarded footprint of one
+                      max-length sequence, pages for attention
+                      families vs a fixed-size O(1) slot for
+                      recurrent ones);
   * quant rows      — the decode-heavy trace replayed with the serve
                      path quantized (w8a16: per-channel int8 weights;
                      w8a8: + per-token int8 activations straight out
@@ -349,6 +358,89 @@ def run_replicated(cfg, params, trace, *, n_replicas, num_blocks=25,
         "prefix_hit_rate_per_replica": [
             s["engine"]["prefix_hit_rate"] for s in per],
     }
+
+
+# Every non-dense family through the same PagedEngine queue (reference
+# attention backend: the recurrent lanes are pure jnp and the families
+# share one scheduler with the headline dense rows above). Smoke
+# overrides mirror tests/test_multiarch_serve.py: mixtral's dense
+# oracle capacity stays drop-free, recurrentgemma's smoke gets one full
+# rec-rec-attn block.
+MULTIARCH = {
+    "moe": ("mixtral_8x7b", dict(capacity_factor=64.0)),
+    "ssm": ("rwkv6_7b", {}),
+    "hybrid": ("recurrentgemma_9b", dict(n_layers=4, n_tail_layers=1)),
+    "encdec": ("whisper_small", {}),
+}
+
+
+def run_multiarch(n_requests=4):
+    """{family: row} tok/s + state accounting per architecture family.
+
+    ``state_bytes_per_token`` is the deterministic memory claim: the
+    bytes of resident sequence state needed to hold ONE max_seq_len
+    sequence, amortized per token — pages (linear in tokens) for
+    attention families, a fixed-size slot (O(1), so the per-token
+    number shrinks as max_seq_len grows) for recurrent ones, both for
+    hybrid, plus the read-only cross pages for encdec."""
+    rows = {}
+    max_seq_len = 64
+    for fam, (arch, over) in MULTIARCH.items():
+        cfg = get_config(arch).smoke()
+        if over:
+            cfg = dataclasses.replace(cfg, **over)
+        params, _ = api.init_params(jax.random.PRNGKey(0), cfg)
+        spec = api.sequence_state_spec(cfg)
+        rng = np.random.default_rng(5)
+
+        def _frames():
+            if not spec.cross_tokens:
+                return None
+            return (rng.standard_normal((16, cfg.d_model))
+                    .astype(np.float32) * 0.1)
+
+        reqs = [Request(prompt=rng.integers(0, cfg.vocab_size, size=12)
+                        .astype(np.int32), max_new_tokens=8,
+                        frames=_frames())
+                for _ in range(n_requests)]
+        eng = PagedEngine(cfg, params, num_blocks=48, block_size=8,
+                          max_seq_len=max_seq_len, max_running=4,
+                          decode_batch=4, prefill_chunk=8,
+                          decode_horizon=8, backend="reference")
+        warm = Request(prompt=np.full((9,), cfg.vocab_size - 1, np.int32),
+                       max_new_tokens=8, frames=_frames())
+        eng.generate([warm])
+        eng.reset_stats()
+        t0 = time.perf_counter()
+        outs = eng.generate(reqs)
+        dt = time.perf_counter() - t0
+        ntok = sum(len(o) for o in outs)
+        st = eng.stats()
+        eng.cache.check_refcounts()
+        assert st["blocks_in_use"] == 0, f"{fam}: leaked pages"
+        assert st.get("state_slots_in_use", 0) == 0, f"{fam}: leaked slots"
+        c = eng.cache
+        per_page = sum(
+            int(np.prod((p.shape[0],) + p.shape[2:])) * p.dtype.itemsize
+            for p in c.pools.values())
+        pages = (c.blocks_for_tokens(max_seq_len) if spec.has_pages else 0)
+        pages += (c.blocks_for_tokens(spec.cross_tokens)
+                  if spec.cross_tokens else 0)
+        slot_bytes = st.get("state_bytes_per_slot", 0)
+        rows[fam] = {
+            "engine": f"paged[reference]+{fam}",
+            "arch": arch,
+            "tok_s": round(ntok / dt, 2),
+            "tokens": ntok,
+            "wall_s": round(dt, 2),
+            "tokens_per_dispatch": st["tokens_per_dispatch"],
+            "peak_pages": st["peak_blocks_in_use"],
+            "peak_state_slots": st.get("peak_state_slots_in_use", 0),
+            "state_bytes_per_slot": slot_bytes,
+            "state_bytes_per_token": round(
+                (pages * per_page + slot_bytes) / max_seq_len, 2),
+        }
+    return rows
 
 
 # Per-mesh-shape rows run in subprocesses: the bench process keeps the
@@ -745,6 +837,11 @@ def main():
             {row["out_digest"] for row in mesh_rows.values()}) == 1,
     }
 
+    # every non-dense family through the same engine/scheduler queue:
+    # per-family tok/s plus the deterministic state-footprint claim
+    # (recurrent state is a fixed-size slot, never pages).
+    multiarch = run_multiarch()
+
     # shared-system-prompt trace, prefix cache on vs off at equal pool
     shared = make_shared_trace(cfg, max(args.requests - 4, 4),
                                np.random.default_rng(1))
@@ -794,6 +891,16 @@ def main():
         },
         "early_exit": early_exit,
         "spec_decode": spec_decode,
+        "multiarch": {
+            **multiarch,
+            "note":
+                "one scheduler/engine queue per family "
+                "(SequenceStateSpec drives pool shapes and capability "
+                "gates); state_bytes_per_token is deterministic and "
+                "guarded lower-is-better — recurrent families hold a "
+                "fixed-size slot, so their number shrinks with "
+                "max_seq_len while attention families stay linear",
+        },
         "sharded": sharded,
         "quantization": quantization,
         "sanitizers": {
@@ -894,6 +1001,19 @@ def main():
             "exact-mode w8a8 outputs must be horizon-invariant"
         assert quantization["exact_w8a8_paged_vs_dense_identical"], \
             "exact-mode w8a8 paged outputs must match dense"
+        # multiarch claims (all deterministic): every family drains
+        # its trace through the shared queue without leaking (asserted
+        # inside run_multiarch), pure-recurrent state never touches the
+        # page pool, and recurrent state is a real fixed-size slot.
+        assert multiarch["ssm"]["peak_pages"] == 0, \
+            "ssm sequence state must live in slots, never pages"
+        assert multiarch["ssm"]["state_bytes_per_slot"] > 0, \
+            "ssm must account its recurrent slot bytes"
+        assert multiarch["hybrid"]["peak_pages"] > 0 and \
+            multiarch["hybrid"]["state_bytes_per_slot"] > 0, \
+            "hybrid must compose both pools"
+        assert multiarch["encdec"]["peak_pages"] > 0, \
+            "encdec must park cross KV + self KV in pages"
         # sanitizer claims: the guarded decode segment ran transfer-free
         # (completion under the disallow guard proves it) and the fused
         # decode step compiled a bounded, pow2-disciplined variant count.

@@ -22,6 +22,10 @@ rationale and examples):
           mutable-state capture bakes stale state into the trace.
   RPR006  an argument donated via ``donate_argnums`` must not be read
           again after the call until reassigned (use-after-donate).
+  RPR007  no ``repro.models.<family>`` imports in ``serve/`` — the
+          engine/scheduler stack is family-agnostic and reaches every
+          architecture through ``repro.models.api`` dispatch (the
+          shared ``api``/``layers``/``state`` modules stay legal).
 
 Suppression: append ``# repro: noqa`` (all rules) or
 ``# repro: noqa RPR003`` (specific, comma/space separated) to the
@@ -53,7 +57,15 @@ RULES = {
               "contract)",
     "RPR005": "jax.jit over a method capturing self",
     "RPR006": "donated argument read after donation",
+    "RPR007": "family model import in serve/ (dispatch through "
+              "repro.models.api)",
 }
+
+#: concrete architecture modules serve/ must never import directly —
+#: the api dispatch layer (and the family-neutral layers/state
+#: modules) are the only sanctioned surface.
+_FAMILY_MODULES = ("transformer", "moe", "whisper", "vlm", "rwkv6",
+                   "rglru")
 
 _NOQA_RE = re.compile(r"#\s*repro:\s*noqa(?:\s+([A-Z0-9,\s]+?))?\s*(?:#|$)")
 
@@ -188,6 +200,7 @@ class FileLinter:
         self.rule_004()
         self.rule_005()
         self.rule_006()
+        self.rule_007()
         return self.violations
 
     def rule_001(self) -> None:
@@ -368,6 +381,32 @@ class FileLinter:
                                       "jax.jit over a bound method bakes "
                                       "captured self state into the trace")
 
+    def rule_007(self) -> None:
+        if not self._in_pkg("repro/serve/"):
+            return
+        banned = {f"repro.models.{m}" for m in _FAMILY_MODULES}
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    if alias.name in banned:
+                        self.flag(node, "RPR007",
+                                  f"import of {alias.name!r} hardwires one "
+                                  "family into serve/ — dispatch through "
+                                  "repro.models.api")
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                if node.module in banned:
+                    self.flag(node, "RPR007",
+                              f"import from {node.module!r} hardwires one "
+                              "family into serve/ — dispatch through "
+                              "repro.models.api")
+                elif node.module == "repro.models":
+                    for alias in node.names:
+                        if alias.name in _FAMILY_MODULES:
+                            self.flag(node, "RPR007",
+                                      f"import of repro.models.{alias.name} "
+                                      "hardwires one family into serve/ — "
+                                      "dispatch through repro.models.api")
+
     # -- RPR006: use-after-donate ---------------------------------------------
 
     def _donation_map(self) -> Dict[str, Tuple[int, ...]]:
@@ -540,7 +579,7 @@ def lint_paths(paths: Sequence[str]) -> List[Violation]:
 def main(argv: Optional[Sequence[str]] = None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis.lint",
-        description="repo-invariant linter (rules RPR001-RPR006; "
+        description="repo-invariant linter (rules RPR001-RPR007; "
                     "see docs/LINTS.md)")
     ap.add_argument("paths", nargs="+", help="files or directories to lint")
     ap.add_argument("--list-rules", action="store_true",

@@ -38,7 +38,11 @@ __all__ = [
     "default_budgets", "EngineSanitizer", "attach",
 ]
 
-#: jitted step attributes the sentinel watches on an engine.
+#: jitted step attributes the sentinel watches on an engine (missing
+#: ones — family-gated steps like _verify/_copy — are skipped).
+#: Admission-time state ops (_encode, _load_slot) are deliberately NOT
+#: watched: they legitimately compile late (first warm-prefix hit,
+#: first distinct frame length) without being decode-loop recompiles.
 ENGINE_STEP_FNS = ("_prefill", "_decode_h", "_verify", "_copy")
 
 
@@ -175,6 +179,9 @@ class EngineSanitizer:
             if cache is not None and hasattr(cache, "check_refcounts"):
                 cache.check_refcounts()
                 self.sweeps += 1
+            slots = getattr(self.engine, "slot_pool", None)
+            if slots is not None:
+                slots.check_slots()
 
     def freeze(self) -> Dict[str, int]:
         """Enter the guarded zero-recompile regime (call after warmup)."""

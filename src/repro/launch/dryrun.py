@@ -116,9 +116,32 @@ def _decode_artifacts(cfg: ArchConfig, shape: ShapeConfig, rules: R.Rules):
     return step, (params, cache, token, pos)
 
 
+def _paged_decode_artifacts(cfg: ArchConfig, shape: ShapeConfig,
+                            rules: R.Rules):
+    """Paged decode step over the family's composite sequence state
+    (page pools and/or state slots) — zero allocation, every family."""
+    params, paxes = _serve_params(cfg)
+    state, saxes, token, pos, refs = api.paged_decode_inputs(cfg, shape)
+    pshard = _shardings(rules, paxes, params)
+    stshard = _shardings(rules, saxes, state)
+    bshard = rules.sharding(("batch",), (shape.global_batch,))
+    rshard = jax.tree.map(
+        lambda t: rules.sharding(("batch",) + (None,) * (len(t.shape) - 1),
+                                 tuple(t.shape)),
+        refs)
+
+    def fn(p, s, t, i, r):
+        with R.use_rules(rules):
+            return api.decode_step_paged(p, t, i, r, s, cfg)
+
+    step = jax.jit(fn, in_shardings=(pshard, stshard, bshard, bshard,
+                                     rshard), donate_argnums=(1,))
+    return step, (params, state, token, pos, refs)
+
+
 def run_cell(arch: str, shape_name: str, mesh_kind: str,
              out_dir: str = RESULTS_DIR, overrides: dict = None,
-             tag: str = "") -> dict:
+             tag: str = "", paged: bool = False) -> dict:
     import dataclasses as _dc
     cfg = get_config(arch)
     if overrides:
@@ -129,7 +152,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
         cfg = _dc.replace(cfg, **typed)
     shape = SHAPES[shape_name]
     t0 = time.time()
-    result = {"arch": arch + (f"+{tag}" if tag else ""), "shape": shape_name,
+    result = {"arch": arch + ("+paged" if paged else "")
+              + (f"+{tag}" if tag else ""), "shape": shape_name,
               "mesh": mesh_kind, "status": "ok", "overrides": overrides or {}}
     if shape_name in cfg.skip_shapes:
         result["status"] = "skipped"
@@ -147,6 +171,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
                 step, args = _train_artifacts(cfg, shape, rules)
             elif shape.kind == "prefill":
                 step, args = _prefill_artifacts(cfg, shape, rules)
+            elif paged:
+                step, args = _paged_decode_artifacts(cfg, shape, rules)
             else:
                 step, args = _decode_artifacts(cfg, shape, rules)
             with R.use_rules(rules):
@@ -204,6 +230,10 @@ def main() -> None:
     ap.add_argument("--set", action="append", default=[],
                     help="config override key=value (e.g. kv_cache_dtype=int8)")
     ap.add_argument("--tag", default="", help="suffix for the result name")
+    ap.add_argument("--paged", action="store_true",
+                    help="decode cells use the paged sequence-state step "
+                         "(page pools + state slots) instead of the dense "
+                         "cache")
     args = ap.parse_args()
     overrides = dict(kv.split("=", 1) for kv in getattr(args, "set"))
 
@@ -214,7 +244,8 @@ def main() -> None:
         for shape in shapes:
             for mesh_kind in meshes:
                 r = run_cell(arch, shape, mesh_kind, args.out,
-                             overrides=overrides, tag=args.tag)
+                             overrides=overrides, tag=args.tag,
+                             paged=args.paged)
                 dom = r.get("dominant", "-")
                 print(f"[{r['status']:>7}] {arch:20s} {shape:12s} "
                       f"{mesh_kind:6s} dominant={dom} "

@@ -11,9 +11,16 @@ Example (CPU smoke):
     PYTHONPATH=src python -m repro.launch.serve --arch mixtral_8x7b --smoke \
     --requests 8 --prompt-len 16 --new-tokens 8
 
-Paged continuous batching (dense LMs):
+Paged continuous batching — every servable family goes through the one
+scheduler/engine queue (dense, moe, ssm, hybrid, encdec; the family's
+sequence_state_spec decides pages vs recurrent state slots vs shared
+cross pages):
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2_0_5b --smoke \
     --engine paged --ops-backend pallas
+  PYTHONPATH=src python -m repro.launch.serve --arch rwkv6_7b --smoke \
+    --engine paged
+  PYTHONPATH=src python -m repro.launch.serve --arch whisper_small --smoke \
+    --engine paged
 
 Open-loop streaming (Poisson arrivals through the AsyncEngine run
 loop, with early exit on --eos-ids and p50/p99 TTFT+ITL reported):
@@ -65,9 +72,12 @@ def main() -> None:
                          "dispatch (paged engine; 1 = one host round "
                          "trip per token, sampling still in-jit)")
     ap.add_argument("--prefix-cache", action=argparse.BooleanOptionalAction,
-                    default=True,
+                    default=None,
                     help="share identical block-aligned prompt prefixes "
-                         "between sequences (paged engine only)")
+                         "between sequences (paged engine only; default: "
+                         "on iff the family's sequence_state_spec "
+                         "supports it — forcing it on an unsupported "
+                         "family is a hard error)")
     ap.add_argument("--watermark", type=int, default=1,
                     help="free pages held back at admission; higher = "
                          "fewer preemptions, lower = denser packing")
@@ -141,11 +151,23 @@ def main() -> None:
     params, param_axes = api.init_params(jax.random.PRNGKey(args.seed), cfg)
     rng = np.random.default_rng(args.seed)
     eos_ids = tuple(int(t) for t in args.eos_ids.split(",") if t.strip())
+    # encdec requests carry synthetic encoder frames (the paged engine
+    # runs the encoder once at admission and parks cross KV in pages).
+    spec_state = (api.sequence_state_spec(cfg)
+                  if args.engine == "paged" else None)
+
+    def _frames():
+        if spec_state is None or not spec_state.cross_tokens:
+            return None
+        return rng.standard_normal(
+            (spec_state.cross_tokens, cfg.d_model)).astype(np.float32)
+
     reqs = [Request(prompt=rng.integers(0, cfg.vocab_size,
                                         size=args.prompt_len).astype(np.int32),
                     max_new_tokens=args.new_tokens,
                     temperature=args.temperature, top_k=args.top_k,
-                    seed=args.sample_seed + i, eos_ids=eos_ids)
+                    seed=args.sample_seed + i, eos_ids=eos_ids,
+                    frames=_frames())
             for i in range(args.requests)]
     max_len = args.prompt_len + args.new_tokens
     if args.replicas > 1 and (args.engine != "paged"
@@ -154,8 +176,10 @@ def main() -> None:
     if args.spec_decode and args.engine != "paged":
         raise SystemExit("--spec-decode requires --engine paged")
     if args.engine == "paged":
+        cross = ((spec_state.cross_tokens + 15) // 16
+                 if spec_state is not None else 0)
         blocks = args.num_blocks or max(
-            args.requests * ((max_len + 15) // 16 + 1), 16)
+            args.requests * ((max_len + 15) // 16 + 1 + cross), 16)
         from repro.serve.spec import spec_config_from_flag
         spec = spec_config_from_flag(args.spec_decode, cfg,
                                      max_k=args.spec_k, seed=args.seed,

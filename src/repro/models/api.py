@@ -143,19 +143,149 @@ def paged_decode_inputs(cfg: ArchConfig, shape: ShapeConfig,
                         block_size: int = 16):
     """Abstract inputs for the paged decode step (dry-run, no allocation).
 
-    Returns (pools SDS tree, pools axes, token SDS, pos SDS, tables SDS)
-    with the pool sized to hold the full batch x seq_len footprint plus
-    the null page — the dense-cache-equivalent capacity.
+    Returns (state SDS tree, state axes tree, token SDS, pos SDS,
+    refs SDS tree) — the composite *sequence state* the family's
+    ``decode_step_paged`` consumes: ``{"k","v"}`` page pools sized to the
+    dense-cache-equivalent capacity (plus the null page and, for encdec,
+    the per-request cross pages), a ``"slots"`` pool with one slot per
+    lane plus the null slot, and the reference vectors (page tables,
+    slot ids, cross tables) the engine passes per dispatch.
     """
     from repro.models.layers import kv_store_dtype
     from repro.serve.kv_cache import PAGED_KV_AXES, cdiv
+    spec = sequence_state_spec(cfg)
+    if not spec.servable:
+        raise ValueError(
+            f"family {cfg.family!r} is not paged-servable "
+            "(see its sequence_state_spec)")
     b, s = shape.global_batch, shape.seq_len
-    num_blocks = b * cdiv(s, block_size) + 1
-    pool_shape = (cfg.n_layers, num_blocks, block_size,
-                  cfg.n_kv_heads, cfg.head_dim)
-    dt = kv_store_dtype(cfg)
-    pools = {"k": _sds(pool_shape, dt), "v": _sds(pool_shape, dt)}
-    tables = _sds((b, cdiv(s, block_size)), jnp.int32)
+    state, axes, refs = {}, {}, {}
+    if spec.has_pages:
+        cross_blocks = cdiv(spec.cross_tokens, block_size)
+        num_blocks = b * (cdiv(s, block_size) + cross_blocks) + 1
+        pool_shape = (spec.kv_layers, num_blocks, block_size,
+                      cfg.n_kv_heads, cfg.head_dim)
+        dt = kv_store_dtype(cfg)
+        state["k"] = _sds(pool_shape, dt)
+        state["v"] = _sds(pool_shape, dt)
+        axes["k"], axes["v"] = PAGED_KV_AXES["k"], PAGED_KV_AXES["v"]
+        refs["tables"] = _sds((b, cdiv(s, block_size)), jnp.int32)
+        if spec.cross_tokens:
+            refs["cross"] = _sds((b, cross_blocks), jnp.int32)
+            refs["cross_valid"] = _sds((b,), jnp.int32)
+    if spec.has_slots:
+        state["slots"] = jax.tree.map(
+            lambda l: _sds((b + 1,) + l.shape, l.dtype), spec.slot_shapes)
+        axes["slots"] = jax.tree.map(
+            lambda ax: ("state_slots",) + tuple(ax), spec.slot_axes,
+            is_leaf=lambda x: isinstance(x, tuple))
+        refs["slots"] = _sds((b,), jnp.int32)
     token = _sds((b,), jnp.int32)
     pos = _sds((b,), jnp.int32)
-    return pools, PAGED_KV_AXES, token, pos, tables
+    return state, axes, token, pos, refs
+
+
+# -- paged family dispatch (the ONLY model surface serve/ talks to) -----------
+#
+# serve/engine.py used to import models.transformer directly, which made
+# "paged serving" a dense-only feature. Every paged entry point now
+# dispatches here on cfg.family with ONE calling convention:
+#
+#   state — the composite sequence-state tree the engine owns:
+#           {"k","v"} page pools (families with kv_layers > 0) and/or
+#           "slots" (a StateSlotPool's device tree);
+#   refs  — per-dispatch reference vectors: "tables" (B, NB) page
+#           tables, "slots" (B,) slot ids, "cross"/"cross_valid" for
+#           encdec. Only the keys the family's spec calls for.
+#
+# dense/moe keep their historical (tables, pools) signatures (pinned by
+# tests that call them directly); the adapters below bridge. Lint rule
+# RPR007 enforces that serve/ never bypasses this dispatch.
+
+
+def sequence_state_spec(cfg: ArchConfig):
+    """The family's :class:`repro.models.state.SequenceStateSpec`."""
+    return get_model(cfg).sequence_state_spec(cfg)
+
+
+def _check_servable(cfg: ArchConfig):
+    if not sequence_state_spec(cfg).servable:
+        raise ValueError(
+            f"family {cfg.family!r} is not paged-servable "
+            "(see its sequence_state_spec)")
+
+
+def prefill_paged(params, tokens, q_start, n_valid, refs, state,
+                  cfg: ArchConfig, *, backend=None):
+    """One chunked-prefill step. Returns (logits (B,C,V), state)."""
+    _check_servable(cfg)
+    m = get_model(cfg)
+    if cfg.family in ("dense", "moe"):
+        logits, pools = m.prefill_paged(
+            params, tokens, q_start, n_valid, refs["tables"], state, cfg,
+            backend=backend)
+        return logits, dict(state, **pools)
+    return m.prefill_paged(params, tokens, q_start, n_valid, refs, state,
+                           cfg, backend=backend)
+
+
+def decode_step_paged(params, token, pos, refs, state, cfg: ArchConfig, *,
+                      backend=None):
+    """One decode step: token/pos (B,). Returns (logits (B,V), state)."""
+    _check_servable(cfg)
+    m = get_model(cfg)
+    if cfg.family in ("dense", "moe"):
+        logits, pools = m.decode_step_paged(
+            params, state, token, pos, refs["tables"], cfg, backend=backend)
+        return logits, dict(state, **pools)
+    return m.decode_step_paged(params, token, pos, refs, state, cfg,
+                               backend=backend)
+
+
+def decode_horizon_paged(params, token, pos, refs, state, temperature,
+                         top_k, seed, counter, eos_ids, cfg: ArchConfig, *,
+                         num_steps, use_top_k=True, stochastic=True,
+                         use_eos=True, backend=None):
+    """``num_steps`` fused decode+sample steps. Returns
+    (tokens (B, num_steps), done (B, num_steps), state)."""
+    _check_servable(cfg)
+    m = get_model(cfg)
+    if cfg.family in ("dense", "moe"):
+        toks, done, pools = m.decode_horizon_paged(
+            params, state, token, pos, refs["tables"], temperature, top_k,
+            seed, counter, eos_ids, cfg, num_steps=num_steps,
+            use_top_k=use_top_k, stochastic=stochastic, use_eos=use_eos,
+            backend=backend)
+        return toks, done, dict(state, **pools)
+    return m.decode_horizon_paged(
+        params, token, pos, refs, state, temperature, top_k, seed,
+        counter, eos_ids, cfg, num_steps=num_steps, use_top_k=use_top_k,
+        stochastic=stochastic, use_eos=use_eos, backend=backend)
+
+
+def verify_paged(params, tokens, q_start, n_valid, refs, state,
+                 temperature, top_k, seed, counter, eos_ids,
+                 cfg: ArchConfig, *, use_top_k=True, stochastic=True,
+                 use_eos=True, backend=None):
+    """Speculative-verify dispatch (spec-decode-capable families only).
+    Returns (pinned (B,C), done (B,C), state)."""
+    if not sequence_state_spec(cfg).supports_spec_decode:
+        raise ValueError(
+            f"family {cfg.family!r} does not support speculative decoding "
+            "(its sequence state cannot rewind rejected drafts)")
+    m = get_model(cfg)
+    pinned, done, pools = m.verify_paged(
+        params, state, tokens, q_start, n_valid, refs["tables"],
+        temperature, top_k, seed, counter, eos_ids, cfg,
+        use_top_k=use_top_k, stochastic=stochastic, use_eos=use_eos,
+        backend=backend)
+    return pinned, done, dict(state, **pools)
+
+
+def encode_paged(params, frames, cross_table, state, cfg: ArchConfig):
+    """Admission-time encoder run (encdec only): park cross-attention
+    K/V in the request's cross pages. Returns the updated state."""
+    if cfg.family != "encdec":
+        raise ValueError(f"encode_paged is encdec-only, got {cfg.family}")
+    return get_model(cfg).encode_paged(params, frames, cross_table, state,
+                                       cfg)

@@ -532,8 +532,10 @@ def apply_cross_attention(p, x, enc_kv, cfg: ArchConfig, phase: str,
     s, t = x.shape[1], k.shape[1]
     if k_pos is None:
         k_pos = jnp.arange(t)
-    ctx = attend_dense(q, k, v, jnp.arange(s), k_pos, cfg, phase,
-                       causal=False)
+    q_pos = jnp.arange(s)
+    if k_pos.ndim == 2:       # per-lane encoder validity (paged serving)
+        q_pos = jnp.broadcast_to(q_pos, (x.shape[0], s))
+    ctx = attend_dense(q, k, v, q_pos, k_pos, cfg, phase, causal=False)
     out = _wo_proj(ctx, p, cfg)
     return constrain(out, "batch", "seq", "embed")
 

@@ -74,8 +74,18 @@ def _combine_local(ye, info, t, dtype):
 
 
 def _moe_inner(x, wr, wg, wu, wd, *, cfg: ArchConfig, ep_axis: Optional[str],
-               tp_axis: Optional[str], bd_axes, ep_size: int):
-    """Local (per-shard) MoE FFN. x: (B_loc, S, D)."""
+               tp_axis: Optional[str], bd_axes, ep_size: int,
+               capacity: Optional[int] = None):
+    """Local (per-shard) MoE FFN. x: (B_loc, S, D).
+
+    ``capacity`` overrides the capacity-factor formula. An expert can
+    receive at most T tokens (top-k indices are distinct per token), so
+    ``capacity >= T`` makes dispatch drop-free — and a drop-free MoE
+    layer is *batch-size invariant*: padding rows and co-batched lanes
+    shift buffer positions but never evict a real token, so each row's
+    output is bit-identical to running it alone. The paged serve path
+    relies on this (see ``_paged_ffn``).
+    """
     b, s, d = x.shape
     tloc = b * s
     e, k = cfg.n_experts, cfg.top_k
@@ -84,8 +94,11 @@ def _moe_inner(x, wr, wg, wu, wd, *, cfg: ArchConfig, ep_axis: Optional[str],
     gates = jax.nn.softmax(logits, axis=-1)
     topk_val, topk_idx = jax.lax.top_k(gates, k)
     topk_val = topk_val / jnp.sum(topk_val, -1, keepdims=True)
-    cap = int(math.ceil(tloc * k * cfg.capacity_factor / e))
-    cap = max(cap, 1)
+    if capacity is None:
+        cap = int(math.ceil(tloc * k * cfg.capacity_factor / e))
+        cap = max(cap, 1)
+    else:
+        cap = capacity
     xe, info = _dispatch_local(x2, gates, topk_idx,
                                topk_val.astype(x2.dtype), e, cap)
     xe = xe.reshape(e, cap, d)
@@ -135,14 +148,17 @@ def _moe_inner(x, wr, wg, wu, wd, *, cfg: ArchConfig, ep_axis: Optional[str],
     return out, aux
 
 
-def apply_moe_ffn(p, x: Array, cfg: ArchConfig, phase: str):
-    """MoE FFN. Returns (out, aux_loss)."""
+def apply_moe_ffn(p, x: Array, cfg: ArchConfig, phase: str,
+                  capacity: Optional[int] = None):
+    """MoE FFN. Returns (out, aux_loss). ``capacity`` overrides the
+    per-expert buffer depth (see ``_moe_inner``)."""
     wr = L.cast(p["router"], cfg)
     wg, wu, wd = (L.cast(p[n], cfg) for n in ("gate", "up", "down"))
     rules = active_rules()
     if rules is None:
         out, aux = _moe_inner(x, wr, wg, wu, wd, cfg=cfg, ep_axis=None,
-                              tp_axis=None, bd_axes=(), ep_size=1)
+                              tp_axis=None, bd_axes=(), ep_size=1,
+                              capacity=capacity)
         return out, aux
 
     mesh = rules.mesh
@@ -162,7 +178,7 @@ def apply_moe_ffn(p, x: Array, cfg: ArchConfig, phase: str):
     wspec_g = P(ep, None, tp)
     wspec_d = P(ep, tp, None)
     fn = partial(_moe_inner, cfg=cfg, ep_axis=ep_axis, tp_axis=tp_axis,
-                 bd_axes=bd_axes, ep_size=ep_size)
+                 bd_axes=bd_axes, ep_size=ep_size, capacity=capacity)
     out, aux = _shard_map(
         fn, mesh=mesh,
         in_specs=(xspec, P(None, None), wspec_g, wspec_g, wspec_d),
@@ -219,6 +235,17 @@ def cache_axes(cfg: ArchConfig):
     return dense_axes(cfg)
 
 
+def sequence_state_spec(cfg: ArchConfig):
+    """MoE shares the dense backbone's state shape (attention KV only);
+    the FFN is stateless. All paged features stay exact because the
+    serve FFN path is capacity-pinned (batch-size-invariant routing)."""
+    from repro.models.state import SequenceStateSpec
+    return SequenceStateSpec(
+        family="moe", kv_layers=cfg.n_layers,
+        supports_prefix_cache=True, supports_spec_decode=True,
+        supports_cow_fork=True, window=cfg.window)
+
+
 def prefill(params, tokens: Array, cfg: ArchConfig, cache_len: int,
             n_pad=None):
     from repro.models.transformer import prefill as dense_prefill
@@ -231,3 +258,54 @@ def decode_step(params, cache, token: Array, pos: Array, cfg: ArchConfig,
     from repro.models.transformer import decode_step as dense_decode
     return dense_decode(params, cache, token, pos, cfg, ffn_apply=_serve_ffn,
                         write_pos=write_pos)
+
+
+# -- paged serving ------------------------------------------------------------
+
+
+def _paged_ffn(p, x, cfg, phase):
+    """Expert-capacity-aware serve FFN: pin capacity to the token count
+    so dispatch never drops. Continuous batching co-schedules unrelated
+    lanes (and pads chunks/horizons); with the formula capacity a busy
+    expert could drop a token *because of its neighbours*, silently
+    diverging from the lane's solo trace. Drop-free dispatch makes each
+    row's output independent of what else rides in the batch — the
+    paged engine's outputs equal the dense oracle's bit for bit."""
+    return apply_moe_ffn(p, x, cfg, phase,
+                         capacity=x.shape[0] * x.shape[1])[0]
+
+
+def prefill_paged(params, tokens, q_start, n_valid, tables, pools,
+                  cfg: ArchConfig, *, backend=None):
+    from repro.models.transformer import prefill_paged as dense_fn
+    return dense_fn(params, tokens, q_start, n_valid, tables, pools, cfg,
+                    backend=backend, ffn_apply=_paged_ffn)
+
+
+def decode_step_paged(params, pools, token, pos, tables, cfg: ArchConfig, *,
+                      backend=None):
+    from repro.models.transformer import decode_step_paged as dense_fn
+    return dense_fn(params, pools, token, pos, tables, cfg,
+                    backend=backend, ffn_apply=_paged_ffn)
+
+
+def decode_horizon_paged(params, pools, token, pos, tables, temperature,
+                         top_k, seed, counter, eos_ids, cfg: ArchConfig, *,
+                         num_steps, use_top_k=True, stochastic=True,
+                         use_eos=True, backend=None):
+    from repro.models.transformer import decode_horizon_paged as dense_fn
+    return dense_fn(params, pools, token, pos, tables, temperature, top_k,
+                    seed, counter, eos_ids, cfg, num_steps=num_steps,
+                    use_top_k=use_top_k, stochastic=stochastic,
+                    use_eos=use_eos, backend=backend, ffn_apply=_paged_ffn)
+
+
+def verify_paged(params, pools, tokens, q_start, n_valid, tables,
+                 temperature, top_k, seed, counter, eos_ids,
+                 cfg: ArchConfig, *, use_top_k=True, stochastic=True,
+                 use_eos=True, backend=None):
+    from repro.models.transformer import verify_paged as dense_fn
+    return dense_fn(params, pools, tokens, q_start, n_valid, tables,
+                    temperature, top_k, seed, counter, eos_ids, cfg,
+                    use_top_k=use_top_k, stochastic=stochastic,
+                    use_eos=use_eos, backend=backend, ffn_apply=_paged_ffn)

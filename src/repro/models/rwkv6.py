@@ -167,8 +167,16 @@ def _wkv_chunked(r, k, v, w, u, state, chunk: int):
 
 
 def time_mix(p, x: Array, last_x: Array, state: Array, cfg: ArchConfig,
-             phase: str) -> Tuple[Array, Array, Array]:
-    """x: (B,S,D); last_x: (B,D); state: (B,H,hd,hd). Returns (out, last, S)."""
+             phase: str, mask: Array = None) -> Tuple[Array, Array, Array]:
+    """x: (B,S,D); last_x: (B,D); state: (B,H,hd,hd). Returns (out, last, S).
+
+    ``mask`` (B, S) marks real tokens in a padded chunk (paged serving):
+    padded positions get decay w := 1 and k := 0, which makes the WKV
+    step an exact identity there (S_new = 1*S + 0) — the carried state
+    after the chunk is bit-for-bit the state after the real tokens
+    alone. Padded *outputs* are garbage, as everywhere else in the
+    paged path; callers never read them.
+    """
     b, s, d = x.shape
     h, hd = cfg.n_heads, cfg.rwkv_head_size
     xprev = _shift(x, last_x)
@@ -200,6 +208,10 @@ def time_mix(p, x: Array, last_x: Array, state: Array, cfg: ArchConfig,
     rf = r.astype(jnp.float32)
     kf = k.astype(jnp.float32)
     vf = v.astype(jnp.float32)
+    if mask is not None:
+        m = mask[:, :, None, None]
+        w = jnp.where(m, w, 1.0)      # identity decay past the real tail
+        kf = jnp.where(m, kf, 0.0)    # rank-1 update vanishes there
     chunk = cfg.rwkv_chunk
     if chunk and s % chunk == 0 and s > chunk:
         o, state = _wkv_chunked(rf, kf, vf, w, u, state, chunk)
@@ -299,3 +311,131 @@ def decode_step(params, cache, token: Array, pos: Array, cfg: ArchConfig):
     x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
     x = L.apply_norm(x, params["final_norm"], cfg, "serve")
     return L.lm_logits(params["embed"], x, cfg)[:, 0], new_cache
+
+
+# -- paged serving (per-sequence state slots; see serve/state.py) -------------
+#
+# RWKV is attention-free: its whole sequence state is O(1) — per layer a
+# (H, hd, hd) WKV matrix plus the two token-shift vectors. The paged
+# engine parks each running sequence's state in one *slot* of a
+# StateSlotPool; these functions gather the lanes' slot rows, advance
+# them, and scatter them back. ``refs["slots"]`` is the (B,) slot-id
+# vector (0 = the write-absorbing null slot for padded lanes). Every op
+# here is per-position or a strict left-to-right scan, so chunked
+# prefill is bit-for-bit the full-prompt computation.
+
+
+def sequence_state_spec(cfg: ArchConfig):
+    from repro.models.state import SequenceStateSpec, sds
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.rwkv_head_size
+    nl = cfg.n_layers
+    return SequenceStateSpec(
+        family="ssm", kv_layers=0,
+        slot_shapes={"tm_x": sds((nl, d), jnp.float32),
+                     "cm_x": sds((nl, d), jnp.float32),
+                     "s": sds((nl, h, hd, hd), jnp.float32)},
+        slot_axes={"tm_x": ("layers", "embed"),
+                   "cm_x": ("layers", "embed"),
+                   "s": ("layers", "heads", "head_dim", None)},
+        # prefix hits restore a block-boundary state checkpoint instead
+        # of COW-sharing pages; spec-decode needs state rewind (rejected
+        # drafts already advanced S), which slots don't support.
+        supports_prefix_cache=True, supports_spec_decode=False,
+        supports_cow_fork=False, window=0)
+
+
+def _last_valid(x: Array, n_valid: Array) -> Array:
+    """Row ``n_valid - 1`` of each lane: (B,S,D), (B,) -> (B,D)."""
+    idx = jnp.broadcast_to((n_valid - 1)[:, None, None],
+                           (x.shape[0], 1, x.shape[2]))
+    return jnp.take_along_axis(x, idx, axis=1)[:, 0]
+
+
+def _layer_paged(x, lp, st, n_valid, cfg: ArchConfig):
+    """One rwkv6 layer over a padded chunk: like ``_layer`` but the
+    carried state stops at ``n_valid`` (identity WKV updates past it,
+    shift vectors read at the last real row)."""
+    mask = jnp.arange(x.shape[1])[None] < n_valid[:, None]
+    h = L.apply_norm(x, lp["ln1"], cfg, "serve")
+    tm_out, _, s_new = time_mix(lp["tm"], h, st["tm_x"].astype(h.dtype),
+                                st["s"], cfg, "serve", mask=mask)
+    x = x + tm_out
+    h2 = L.apply_norm(x, lp["ln2"], cfg, "serve")
+    cm_out, _ = channel_mix(lp["cm"], h2, st["cm_x"].astype(h2.dtype), cfg)
+    x = x + cm_out
+    st_new = {"tm_x": _last_valid(h, n_valid).astype(jnp.float32),
+              "cm_x": _last_valid(h2, n_valid).astype(jnp.float32),
+              "s": s_new}
+    return x, st_new
+
+
+def _gather_slots(state, refs):
+    """Slot pool (N, L, ...) -> layer-scan layout (L, B, ...)."""
+    return jax.tree.map(lambda s: jnp.moveaxis(s[refs["slots"]], 0, 1),
+                        state["slots"])
+
+
+def _scatter_slots(state, refs, st):
+    """Write lanes' (L, B, ...) states back into their slot rows.
+    Padded lanes all target the null slot 0 — its content is garbage by
+    contract and never read back."""
+    rows = jax.tree.map(lambda a: jnp.moveaxis(a, 0, 1), st)
+    slots = jax.tree.map(lambda s, r: s.at[refs["slots"]].set(
+        r.astype(s.dtype)), state["slots"], rows)
+    return {"slots": slots}
+
+
+def prefill_paged(params, tokens: Array, q_start: Array, n_valid: Array,
+                  refs, state, cfg: ArchConfig, *, backend=None):
+    """One chunked-prefill step: advance each lane's slot state by its
+    ``n_valid`` real tokens. ``q_start`` is unused (no positional
+    encoding); returns (logits (B,C,V), state)."""
+    st = _gather_slots(state, refs)
+    x = L.embed_tokens(params["embed"], tokens, cfg)
+
+    def body(x, scanned):
+        lp, stl = scanned
+        return _layer_paged(x, lp, stl, n_valid, cfg)
+
+    x, new_st = jax.lax.scan(body, x, (params["layers"], st))
+    x = L.apply_norm(x, params["final_norm"], cfg, "serve")
+    logits = L.lm_logits(params["embed"], x, cfg)
+    return logits, _scatter_slots(state, refs, new_st)
+
+
+def decode_step_paged(params, token: Array, pos: Array, refs, state,
+                      cfg: ArchConfig, *, backend=None):
+    """One decode step over slot state. ``pos`` unused. Returns
+    (logits (B, V), state)."""
+    st = _gather_slots(state, refs)
+    logits, new_st = decode_step(params, st, token, pos, cfg)
+    return logits, _scatter_slots(state, refs, new_st)
+
+
+def decode_horizon_paged(params, token: Array, pos: Array, refs, state,
+                         temperature: Array, top_k: Array, seed: Array,
+                         counter: Array, eos_ids: Array, cfg: ArchConfig, *,
+                         num_steps: int, use_top_k: bool = True,
+                         stochastic: bool = True, use_eos: bool = True,
+                         backend=None):
+    """``num_steps`` fused decode+sample steps (see the transformer
+    variant for the sampling/eos contract). Slot rows are gathered once,
+    carried through the scan, and scattered back once — per-horizon slot
+    traffic, not per-token."""
+    from repro.serve.sampling import eos_hits, sample_tokens
+    st0 = _gather_slots(state, refs)
+
+    def step(carry, i):
+        st, tok = carry
+        logits, st = decode_step(params, st, tok, pos, cfg)
+        nxt = sample_tokens(logits, temperature, top_k, seed,
+                            counter + i, cfg.vocab_size,
+                            use_top_k=use_top_k, stochastic=stochastic)
+        done = (eos_hits(nxt, eos_ids) if use_eos
+                else jnp.zeros(nxt.shape, jnp.bool_))
+        return (st, nxt), (nxt, done)
+
+    (st, _), (toks, done) = jax.lax.scan(
+        step, (st0, token), jnp.arange(num_steps, dtype=jnp.int32))
+    return (jnp.transpose(toks), jnp.transpose(done),
+            _scatter_slots(state, refs, st))

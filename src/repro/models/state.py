@@ -1,0 +1,79 @@
+"""Paged *sequence state*: the per-family contract the serve stack runs on.
+
+PRs 1-9 built a serving system whose only notion of per-sequence state
+was attention KV parked in ref-counted pages. That is exactly right for
+dense/moe transformers and exactly wrong for everything else in
+``models/``: rwkv6 carries a (H, hd, hd) WKV matrix plus token-shift
+vectors, rglru carries RG-LRU hidden + causal-conv state next to its
+windowed attention layers, and whisper needs read-only cross-attention
+KV computed once per request. :class:`SequenceStateSpec` is the single
+declaration each family makes about what its sequence state *is*:
+
+* ``kv_layers``   — how many layers of paged self-attention KV the
+  family writes (0 = attention-free; hybrid counts attention blocks
+  only; encdec counts decoder layers).
+* ``slot_shapes`` — a pytree of :class:`jax.ShapeDtypeStruct` for the
+  fixed-size recurrent state one sequence owns (no batch dim). Slot
+  families get per-sequence *slots* in a
+  :class:`~repro.serve.state.StateSlotPool` instead of COW pages, and
+  block-boundary *checkpoints* instead of shared prefixes.
+* ``cross_tokens`` — read-only cross-attention KV rows parked in shared
+  pages at admission (whisper's encoder output; 0 elsewhere).
+* capability flags — features are *gated*, not approximated: asking for
+  spec-decode on rwkv6 raises instead of silently garbling the stream.
+
+The spec is declared next to ``init_cache``/``cache_axes`` in each
+``models/*.py`` and dispatched through :func:`repro.models.api.
+sequence_state_spec`; ``serve/`` never imports a family module directly
+(lint rule RPR007).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+@dataclasses.dataclass(frozen=True)
+class SequenceStateSpec:
+    """What one sequence's serve-time state is, for one model family.
+
+    ``slot_shapes`` leaves are :class:`jax.ShapeDtypeStruct` (per-slot,
+    no batch dim); ``None`` means the family carries no recurrent
+    state. ``window`` mirrors ``cfg.window`` so the engine can validate
+    ``max_seq_len`` against it (paged pools are append-only; they are
+    bit-exact with a windowed oracle only while the window never
+    binds).
+    """
+    family: str
+    kv_layers: int = 0
+    cross_tokens: int = 0
+    slot_shapes: Any = None
+    slot_axes: Any = None       # logical axes per slot leaf (no slot dim)
+    supports_prefix_cache: bool = False
+    supports_spec_decode: bool = False
+    supports_cow_fork: bool = False
+    window: int = 0
+    servable: bool = True
+
+    @property
+    def has_pages(self) -> bool:
+        return self.kv_layers > 0
+
+    @property
+    def has_slots(self) -> bool:
+        return self.slot_shapes is not None
+
+    def slot_bytes(self) -> int:
+        """Bytes of recurrent state one sequence owns (0 if none)."""
+        if self.slot_shapes is None:
+            return 0
+        return sum(math.prod(l.shape) * l.dtype.itemsize
+                   for l in jax.tree.leaves(self.slot_shapes))

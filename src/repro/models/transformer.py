@@ -98,6 +98,17 @@ def cache_axes(cfg: ArchConfig):
             "pos": (None,)}
 
 
+def sequence_state_spec(cfg: ArchConfig):
+    """Dense LMs: sequence state is attention KV and nothing else —
+    every layer pages, every paged feature (prefix sharing, COW forks,
+    speculative verify) is exact."""
+    from repro.models.state import SequenceStateSpec
+    return SequenceStateSpec(
+        family="dense", kv_layers=cfg.n_layers,
+        supports_prefix_cache=True, supports_spec_decode=True,
+        supports_cow_fork=True, window=cfg.window)
+
+
 def prefill(params, tokens: Array, cfg: ArchConfig, cache_len: int,
             ffn_apply=None, n_pad=None) -> Tuple[Array, Dict[str, Array]]:
     """Run the full prompt, returning last-position logits + filled cache.

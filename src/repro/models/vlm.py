@@ -57,6 +57,17 @@ def cache_axes(cfg: ArchConfig):
     return dense_axes(cfg)
 
 
+def sequence_state_spec(cfg: ArchConfig):
+    """Not paged-servable: prefill consumes precomputed patch embeddings
+    (no token ids to replay) and M-RoPE needs the 3-axis position ids
+    the paged request schema does not carry. The engine refuses the
+    family with a hard error instead of serving garbage."""
+    from repro.models.state import SequenceStateSpec
+    return SequenceStateSpec(
+        family="vlm", kv_layers=cfg.n_layers, servable=False,
+        window=cfg.window)
+
+
 def prefill(params, batch: Dict[str, Array], cfg: ArchConfig,
             cache_len: int):
     x = L.cast(jnp.asarray(batch["embeds"]), cfg)

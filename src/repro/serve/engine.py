@@ -35,6 +35,7 @@ from repro.models import api
 from repro.serve.kv_cache import PagedKVCache, copy_pages
 from repro.serve.sampling import apply_finish, eos_table, sampler_for
 from repro.serve.scheduler import Scheduler, Sequence
+from repro.serve.state import StateCheckpointCache, StateSlotPool
 from repro.sharding import rules as R
 
 Array = jax.Array
@@ -53,6 +54,9 @@ class Request:
     # sequence is kept in the output; anything after it is discarded.
     eos_ids: Tuple[int, ...] = ()
     stop: Tuple[Tuple[int, ...], ...] = ()
+    # encdec only: raw encoder input (S_enc, D) or (1, S_enc, D), run
+    # once per admission.
+    frames: Optional[np.ndarray] = None
     out: Optional[List[int]] = None
 
 
@@ -65,10 +69,20 @@ def _run_ctx(rules: Optional[R.Rules]):
 
 
 class PagedEngine:
-    """Continuous-batching engine over a shared-page KV cache.
+    """Continuous-batching engine over paged **sequence state**.
 
-    Three jitted steps drive the whole loop (pools are donated — the
-    page pool is updated in place):
+    One engine class serves every family in the repo: the family's
+    :class:`repro.models.state.SequenceStateSpec` declares which pools
+    its per-sequence state lives in — ref-counted KV pages (attention
+    layers), fixed-size recurrent state slots (rwkv6/rglru layers;
+    serve/state.py), read-only shared cross pages (whisper's encoder
+    output) — and which features (prefix cache, speculative decoding,
+    COW fork) are legal; unsupported features raise at construction
+    rather than silently degrading. All model calls dispatch through
+    ``models.api`` — the engine never imports a family module.
+
+    Three jitted steps drive the whole loop (the composite state is
+    donated — pools and slots are updated in place):
 
       * ``_prefill``: one chunk of one sequence's replay (B=1, C static;
         padded tail writes route to the null page via ``n_valid``);
@@ -107,15 +121,37 @@ class PagedEngine:
                  max_running: int = 8, decode_batch: int = 4,
                  prefill_chunk: int = 16, decode_horizon: int = 8,
                  backend: Optional[str] = None,
-                 prefix_cache: bool = True, watermark: int = 1,
+                 prefix_cache: Optional[bool] = None, watermark: int = 1,
                  rules: Optional[R.Rules] = None, param_axes=None,
                  spec_config=None):
-        if cfg.family != "dense":
+        # the family's sequence-state shape drives everything below:
+        # which pools exist, which features are legal, how admission
+        # accounts footprint.
+        state_spec = api.sequence_state_spec(cfg)
+        if not state_spec.servable:
             raise ValueError(
-                f"PagedEngine serves dense LMs, got {cfg.family}")
-        if cfg.window:
-            raise ValueError("PagedEngine does not support sliding-window "
-                             "caches (pages are append-only)")
+                f"family {cfg.family!r} is not paged-servable "
+                "(see its sequence_state_spec)")
+        if cfg.window and max_seq_len > cfg.window:
+            raise ValueError(
+                "pages are append-only: serving past the sliding window "
+                f"(max_seq_len {max_seq_len} > window {cfg.window}) would "
+                "keep dead KV resident; cap max_seq_len at the window")
+        # prefix_cache is tri-state: None = what the family supports;
+        # an explicit True on an unsupported family is a hard error, not
+        # a silent downgrade.
+        if prefix_cache is None:
+            prefix_cache = state_spec.supports_prefix_cache
+        elif prefix_cache and not state_spec.supports_prefix_cache:
+            raise ValueError(
+                f"family {cfg.family!r} does not support prefix caching "
+                "(its sequence state cannot be restored at a matched "
+                "boundary)")
+        if spec_config is not None and not state_spec.supports_spec_decode:
+            raise ValueError(
+                f"family {cfg.family!r} does not support speculative "
+                "decoding (its sequence state cannot rewind rejected "
+                "drafts)")
         if backend is None:
             backend = ops.backend_for(cfg, "paged_attention",
                                       cfg.softmax_mode)
@@ -123,12 +159,18 @@ class PagedEngine:
             raise ValueError(
                 f"decode_horizon must be >= 1, got {decode_horizon}")
         self.cfg = cfg
+        self.state_spec = state_spec
+        self.prefix_cache = prefix_cache
         # w8a16/w8a8: pack every projection weight to int8 + per-channel
         # fp scales *before* layout (the packed {"q","s"} leaves carry
         # mirrored axes, so the sharding rules below still apply).
         # quantize_params is idempotent — replica engines re-feeding an
         # already-quantized tree pass through untouched.
         if cfg.quant.weights:
+            if cfg.family not in ("dense", "moe"):
+                raise ValueError(
+                    f"family {cfg.family!r} has no quantized serving "
+                    "path (quant.weights is dense/moe-only)")
             params = R.quantize_params(params)
             if param_axes is not None:
                 param_axes = R.quantize_param_axes(param_axes)
@@ -144,15 +186,34 @@ class PagedEngine:
         self.backend = backend
         self.rules = rules
         self.model = api.get_model(cfg)
+        # the cache is always constructed — a pure-recurrent family gets
+        # zero-byte pools (kv_layers=0) with every host-side invariant
+        # (free lists, leak checks, sanitizer budgets) intact.
         self.cache = PagedKVCache(cfg, num_blocks=num_blocks,
                                   block_size=block_size,
                                   max_seq_len=max_seq_len,
-                                  prefix_cache=prefix_cache)
+                                  prefix_cache=(prefix_cache
+                                                and state_spec.has_pages),
+                                  kv_layers=state_spec.kv_layers)
         if rules is not None:
             self.cache.shard(rules)
+        # recurrent families: one fixed-size state slot per running lane
+        # (+ the null slot), and — when prefix caching is on — the
+        # block-boundary checkpoint cache that stands in for page
+        # sharing (serve/state.py).
+        self.slot_pool = None
+        self.ckpts = None
+        if state_spec.has_slots:
+            self.slot_pool = StateSlotPool(state_spec,
+                                           num_slots=max_running + 1)
+            if rules is not None:
+                self.slot_pool.shard(rules)
+            if prefix_cache:
+                self.ckpts = StateCheckpointCache(block_size=block_size)
         self.sched = Scheduler(self.cache, max_running=max_running,
                                prefill_chunk=prefill_chunk,
-                               watermark=watermark)
+                               watermark=watermark, spec=state_spec,
+                               slots=self.slot_pool, ckpts=self.ckpts)
         # speculative decoding (serve/spec.py): drafter + K controller.
         # A draft model must share the target's vocab — acceptance
         # compares draft ids against pinned draws over cfg.vocab_size.
@@ -176,35 +237,56 @@ class PagedEngine:
         self.finish_reasons: Dict[str, int] = {}
         self._finished: Dict[int, List[int]] = {}
 
-        def _prefill(params, pools, tokens, q_start, n_valid, tables):
-            return self.model.prefill_paged(params, tokens, q_start,
-                                            n_valid, tables, pools, cfg,
-                                            backend=backend)
+        def _prefill(params, state, tokens, q_start, n_valid, refs):
+            return api.prefill_paged(params, tokens, q_start, n_valid,
+                                     refs, state, cfg, backend=backend)
 
-        def _decode_h(params, pools, token, pos, tables, temperature,
+        def _decode_h(params, state, token, pos, refs, temperature,
                       top_k, seed, counter, eos_ids, num_steps, use_top_k,
                       stochastic, use_eos):
-            return self.model.decode_horizon_paged(
-                params, pools, token, pos, tables, temperature, top_k,
+            return api.decode_horizon_paged(
+                params, token, pos, refs, state, temperature, top_k,
                 seed, counter, eos_ids, cfg, num_steps=num_steps,
-                use_top_k=use_top_k, stochastic=stochastic,
-                use_eos=use_eos, backend=backend)
-
-        def _verify(params, pools, tokens, q_start, n_valid, tables,
-                    temperature, top_k, seed, counter, eos_ids,
-                    use_top_k, stochastic, use_eos):
-            return self.model.verify_paged(
-                params, pools, tokens, q_start, n_valid, tables,
-                temperature, top_k, seed, counter, eos_ids, cfg,
                 use_top_k=use_top_k, stochastic=stochastic,
                 use_eos=use_eos, backend=backend)
 
         self._prefill = jax.jit(_prefill, donate_argnums=(1,))
         self._decode_h = jax.jit(_decode_h, donate_argnums=(1,),
                                  static_argnums=(10, 11, 12, 13))
-        self._verify = jax.jit(_verify, donate_argnums=(1,),
-                               static_argnums=(11, 12, 13))
-        self._copy = jax.jit(copy_pages, donate_argnums=(0,))
+        if state_spec.supports_spec_decode:
+            def _verify(params, state, tokens, q_start, n_valid, refs,
+                        temperature, top_k, seed, counter, eos_ids,
+                        use_top_k, stochastic, use_eos):
+                return api.verify_paged(
+                    params, tokens, q_start, n_valid, refs, state,
+                    temperature, top_k, seed, counter, eos_ids, cfg,
+                    use_top_k=use_top_k, stochastic=stochastic,
+                    use_eos=use_eos, backend=backend)
+            self._verify = jax.jit(_verify, donate_argnums=(1,),
+                                   static_argnums=(11, 12, 13))
+        if state_spec.has_pages:
+            self._copy = jax.jit(copy_pages, donate_argnums=(0,))
+        if state_spec.has_slots:
+            # slot lifecycle ops: read one sequence's slot (checkpoint
+            # snapshot), load a host checkpoint into a fresh slot, and
+            # zero-fill a cold slot (a slot's device contents are stale
+            # garbage from its previous owner at acquire time).
+            self._snap = jax.jit(
+                lambda slots, i: jax.tree.map(lambda s: s[i], slots))
+            self._load_slot = jax.jit(
+                lambda slots, i, val: jax.tree.map(
+                    lambda s, v: s.at[i].set(v.astype(s.dtype)),
+                    slots, val),
+                donate_argnums=(0,))
+            self._zero_slot = jax.jit(
+                lambda slots, i: jax.tree.map(
+                    lambda s: s.at[i].set(jnp.zeros_like(s[i])), slots),
+                donate_argnums=(0,))
+        if state_spec.cross_tokens:
+            def _encode(params, frames, cross_row, state):
+                return api.encode_paged(params, frames, cross_row, state,
+                                        cfg)
+            self._encode = jax.jit(_encode, donate_argnums=(3,))
 
     def _apply_copies(self, copies: List[Tuple[int, int]]) -> None:
         """Replay COW page duplications on device, before the step that
@@ -223,6 +305,98 @@ class PagedEngine:
                                       jnp.asarray(np.array(src, np.int32)),
                                       jnp.asarray(np.array(dst, np.int32)))
 
+    # -- composite sequence state ---------------------------------------------
+
+    def _state(self) -> Dict[str, object]:
+        """The family's device state for one jitted step: page pools
+        and/or the slot tree, keyed the way ``models.api`` dispatch
+        expects. Built fresh per call — the step donates it and
+        :meth:`_put_state` writes the returned arrays back."""
+        st: Dict[str, object] = (dict(self.cache.pools)
+                                 if self.state_spec.has_pages else {})
+        if self.slot_pool is not None:
+            st["slots"] = self.slot_pool.slots
+        return st
+
+    def _put_state(self, state: Dict[str, object]) -> None:
+        if self.state_spec.has_pages:
+            self.cache.pools = {"k": state["k"], "v": state["v"]}
+        if self.slot_pool is not None:
+            self.slot_pool.slots = state["slots"]
+
+    def _refs(self, seqs: List[Optional[Sequence]]) -> Dict[str, Array]:
+        """Per-lane state references (page tables / slot ids / cross
+        tables) for a padded batch; ``None`` lanes get null routes."""
+        sids = [s.seq_id if s is not None else None for s in seqs]
+        spec = self.state_spec
+        refs: Dict[str, Array] = {}
+        if spec.has_pages:
+            refs["tables"] = jnp.asarray(self.cache.batch_tables(sids))
+        if self.slot_pool is not None:
+            refs["slots"] = jnp.asarray(self.slot_pool.batch_slots(sids))
+        if spec.cross_tokens:
+            cb = self.cache.blocks_for_tokens(spec.cross_tokens)
+            refs["cross"] = jnp.asarray(self.cache.batch_cross(sids, cb))
+            # null lanes claim one valid cross token: an all-masked
+            # softmax row would be NaN, so they attend one garbage
+            # null-page key instead (the self-attention null-lane
+            # precedent: kv_len = pos + 1 = 1).
+            cv = np.array([s.cross_valid if s is not None else 1
+                           for s in seqs], np.int32)
+            refs["cross_valid"] = jnp.asarray(cv)
+        return refs
+
+    def _init_state(self, seq: Sequence) -> None:
+        """Once per admission, before the first prefill chunk: make the
+        sequence's non-page state real — zero-fill or checkpoint-restore
+        its recurrent slot, and (encdec) run the encoder once, parking
+        cross K/V in the pages the scheduler reserved."""
+        if seq.state_ready:
+            return
+        if self.slot_pool is not None:
+            idx = jnp.asarray(np.int32(self.slot_pool.slot_of(seq.seq_id)))
+            if seq._restore is not None:
+                val = jax.tree.map(lambda a: jnp.asarray(np.asarray(a)),
+                                   seq._restore)
+                self.slot_pool.slots = self._load_slot(
+                    self.slot_pool.slots, idx, val)
+                seq._restore = None
+            else:
+                self.slot_pool.slots = self._zero_slot(
+                    self.slot_pool.slots, idx)
+        if self.state_spec.cross_tokens:
+            if seq.frames is None:
+                raise ValueError(
+                    f"family {self.cfg.family!r} needs encoder frames on "
+                    "every request (Request.frames)")
+            frames = np.asarray(seq.frames, np.float32)
+            if frames.ndim == 2:
+                frames = frames[None]
+            seq.cross_valid = max(
+                1, min(frames.shape[1], self.state_spec.cross_tokens))
+            cb = self.cache.blocks_for_tokens(self.state_spec.cross_tokens)
+            row = jnp.asarray(self.cache.cross_row(seq.seq_id, cb)[None])
+            self._put_state(self._encode(self.params, jnp.asarray(frames),
+                                         row, self._state()))
+        seq.state_ready = True
+
+    def _maybe_checkpoint(self, seq: Sequence, boundary: int) -> None:
+        """After a prefill chunk ending at ``boundary`` replay tokens:
+        snapshot the slot to host and register it under the prompt's
+        chain keys — iff the boundary is block-aligned and strictly
+        inside the prompt (the final position is always recomputed, like
+        the page cache's ``len(prompt) - 1`` cap)."""
+        if self.ckpts is None or seq.prefix_keys is None:
+            return
+        if (boundary % self.cache.block_size != 0 or boundary <= 0
+                or boundary > seq.prompt_len - 1):
+            return
+        idx = jnp.asarray(np.int32(self.slot_pool.slot_of(seq.seq_id)))
+        snap = self._snap(self.slot_pool.slots, idx)
+        # whole-array d2h (guard-sanctioned), one leaf at a time
+        self.ckpts.register(seq.prefix_keys, boundary,
+                            jax.tree.map(np.asarray, snap))
+
     # -- one engine iteration -------------------------------------------------
 
     def _prefill_step(self, seq: Sequence) -> None:
@@ -234,19 +408,22 @@ class PagedEngine:
         if copies is None:
             return                       # seq itself was preempted
         self._apply_copies(copies)
+        self._init_state(seq)
         chunk = np.zeros((1, c), np.int32)
         chunk[0, :real] = replay[start:start + real]
-        table = jnp.asarray(self.cache.batch_tables([seq.seq_id]))
-        logits, pools = self._prefill(
-            self.params, self.cache.pools, jnp.asarray(chunk),
+        refs = self._refs([seq])
+        logits, state = self._prefill(
+            self.params, self._state(), jnp.asarray(chunk),
             jnp.asarray(np.array([start], np.int32)),
             jnp.asarray(np.array([real], np.int32)),
-            table)
-        self.cache.pools = pools
+            refs)
+        self._put_state(state)
         seq.prefilled = start + real
+        self._maybe_checkpoint(seq, start + real)
         if not seq.in_prefill:
-            self.cache.register_prompt(seq.seq_id, seq.prompt,
-                                       seq.prefix_keys)
+            if self.state_spec.has_pages:
+                self.cache.register_prompt(seq.seq_id, seq.prompt,
+                                           seq.prefix_keys)
             if not seq.out:
                 # fresh sequence: sample the first generated token from
                 # the last *real* prompt position's logits. A resumed
@@ -296,7 +473,7 @@ class PagedEngine:
         topk = np.zeros((d,), np.int32)
         seed = np.zeros((d,), np.uint32)
         ctr = np.zeros((d,), np.int32)
-        sids: List[Optional[int]] = [None] * d
+        seqs: List[Optional[Sequence]] = [None] * d
         for i, seq in enumerate(lanes):
             token[i] = seq.out[-1]
             pos[i] = seq.prompt_len + len(seq.out) - 1
@@ -306,8 +483,8 @@ class PagedEngine:
             # counter 0 on the prefill-logits token, so the device
             # stream continues exactly where it left off.
             ctr[i] = len(seq.out)
-            sids[i] = seq.seq_id
-        tables = jnp.asarray(self.cache.batch_tables(sids))
+            seqs[i] = seq
+        refs = self._refs(seqs)
         # static sampling fast paths: skipping the top-k rank sorts /
         # Gumbel rows / eos membership tests is an exact identity for
         # lanes that don't use them, so flags from the live batch never
@@ -322,12 +499,12 @@ class PagedEngine:
             width = 1 << (widest - 1).bit_length() if widest > 1 else 1
             eos = np.full((d, width), -1, np.int32)
             eos[:len(lanes)] = eos_table([s.sampler for s in lanes], width)
-        toks, done, pools = self._decode_h(
-            self.params, self.cache.pools, jnp.asarray(token),
-            jnp.asarray(pos), tables, jnp.asarray(temp), jnp.asarray(topk),
+        toks, done, state = self._decode_h(
+            self.params, self._state(), jnp.asarray(token),
+            jnp.asarray(pos), refs, jnp.asarray(temp), jnp.asarray(topk),
             jnp.asarray(seed), jnp.asarray(ctr), jnp.asarray(eos), h,
             use_top_k, stochastic, use_eos)
-        self.cache.pools = pools
+        self._put_state(state)
         rows = np.asarray(toks)
         done_rows = np.asarray(done)
         for i, seq in enumerate(lanes):
@@ -416,7 +593,7 @@ class PagedEngine:
         topk = np.zeros((d,), np.int32)
         seed = np.zeros((d,), np.uint32)
         ctr = np.zeros((d,), np.int32)
-        sids: List[Optional[int]] = [None] * d
+        seqs: List[Optional[Sequence]] = [None] * d
         for i, (seq, draft) in enumerate(lanes):
             row = [seq.out[-1]] + draft
             tokens[i, :len(row)] = row
@@ -425,8 +602,8 @@ class PagedEngine:
             s = seq.sampler
             temp[i], topk[i], seed[i] = s.temperature, s.top_k, s.seed
             ctr[i] = len(seq.out)
-            sids[i] = seq.seq_id
-        tables = jnp.asarray(self.cache.batch_tables(sids))
+            seqs[i] = seq
+        refs = self._refs(seqs)
         use_top_k = any(s.sampler.top_k > 0 for s, _ in lanes)
         stochastic = any(s.sampler.temperature > 0 for s, _ in lanes)
         widest = max(len(s.sampler.eos_ids) for s, _ in lanes)
@@ -437,13 +614,13 @@ class PagedEngine:
             eos = np.full((d, width), -1, np.int32)
             eos[:len(lanes)] = eos_table([s.sampler for s, _ in lanes],
                                          width)
-        pinned, done, pools = self._verify(
-            self.params, self.cache.pools, jnp.asarray(tokens),
-            jnp.asarray(q_start), jnp.asarray(n_valid), tables,
+        pinned, done, state = self._verify(
+            self.params, self._state(), jnp.asarray(tokens),
+            jnp.asarray(q_start), jnp.asarray(n_valid), refs,
             jnp.asarray(temp), jnp.asarray(topk), jnp.asarray(seed),
             jnp.asarray(ctr), jnp.asarray(eos), use_top_k, stochastic,
             use_eos)
-        self.cache.pools = pools
+        self._put_state(state)
         rows = np.asarray(pinned)
         done_rows = np.asarray(done)
         for i, (seq, draft) in enumerate(lanes):
@@ -509,9 +686,14 @@ class PagedEngine:
         """Validate and queue one request; returns the live Sequence
         handle (the async loop streams from it and cancels through
         it). ``Scheduler.submit`` is the single validation site."""
+        if self.state_spec.cross_tokens and request.frames is None:
+            raise ValueError(
+                f"family {self.cfg.family!r} needs encoder frames on "
+                "every request (Request.frames)")
         return self.sched.submit(
             request.prompt, request.max_new_tokens,
-            sampler=sampler_for(request, self.cfg.vocab_size))
+            sampler=sampler_for(request, self.cfg.vocab_size),
+            frames=request.frames)
 
     def cancel(self, seq: Sequence) -> bool:
         """Cancel a submitted sequence — a finish event like any other:
@@ -549,7 +731,10 @@ class PagedEngine:
         activity, and pool occupancy."""
         c, s = self.cache, self.sched
         out = {
-            "prefix_cache": c.prefix_cache,
+            # engine-level flag: for a slot-only family the page pool
+            # reports False (it has no pages to share) while prefix
+            # reuse still runs through the state-checkpoint cache.
+            "prefix_cache": self.prefix_cache,
             "prefix_hit_rate": round(c.prefix_hit_rate(), 4),
             "prefix_hit_tokens": c.prefix_hit_tokens,
             "prefix_query_tokens": c.prefix_query_tokens,
@@ -573,6 +758,27 @@ class PagedEngine:
             "truncated_tokens": self.truncated_tokens,
             "reclaimed_pages": self.reclaimed_pages,
         }
+        # total state footprint: live pages (all pools) + live slots —
+        # the quantity admission/preemption actually manage. For a
+        # recurrent family this is O(1) per sequence by construction.
+        per_page = sum(
+            int(np.prod((p.shape[0],) + p.shape[2:])) * p.dtype.itemsize
+            for p in c.pools.values())
+        foot = c.blocks_in_use * per_page
+        if self.slot_pool is not None:
+            sp = self.slot_pool
+            foot += sp.slots_in_use * sp.bytes_per_slot
+            out.update({
+                "state_slots_in_use": sp.slots_in_use,
+                "free_state_slots": sp.free_slots,
+                "peak_state_slots_in_use": sp.peak_slots_in_use,
+                "state_bytes_per_slot": sp.bytes_per_slot,
+            })
+            if self.ckpts is not None:
+                cs = self.ckpts.stats()
+                out["state_checkpoints"] = cs["entries"]
+                out["checkpoint_hit_tokens"] = cs["hit_tokens"]
+        out["state_footprint_bytes"] = int(foot)
         if self.spec is not None:
             # accepted tokens per *target* dispatch is exactly
             # tokens_per_dispatch under speculation (verify dispatches
@@ -594,6 +800,8 @@ class PagedEngine:
     def reset_stats(self) -> None:
         """Zero the serving counters (cached pages stay resident)."""
         self.cache.reset_stats()
+        if self.slot_pool is not None:
+            self.slot_pool.reset_stats()
         self.sched.preemptions = 0
         self.sched.admitted = 0
         self.sched.finished = 0

@@ -87,7 +87,8 @@ class PagedKVCache:
 
     def __init__(self, cfg: ArchConfig, *, num_blocks: int,
                  block_size: int = 16, max_seq_len: int = 512,
-                 dtype=None, prefix_cache: bool = True):
+                 dtype=None, prefix_cache: bool = True,
+                 kv_layers: Optional[int] = None):
         if num_blocks < 2:
             raise ValueError("need >= 2 blocks (page 0 is the null page)")
         from repro.models.layers import kv_store_dtype
@@ -97,8 +98,12 @@ class PagedKVCache:
         self.max_blocks_per_seq = cdiv(max_seq_len, block_size)
         self.max_seq_len = max_seq_len
         self.prefix_cache = prefix_cache
+        # kv_layers lets a family page only its attention layers (hybrid
+        # blocks, encdec decoder layers); a pure-recurrent family passes
+        # 0 and gets zero-byte pools with all host bookkeeping intact.
+        self.kv_layers = cfg.n_layers if kv_layers is None else kv_layers
         dt = dtype or kv_store_dtype(cfg)
-        shape = (cfg.n_layers, num_blocks, block_size,
+        shape = (self.kv_layers, num_blocks, block_size,
                  cfg.n_kv_heads, cfg.head_dim)
         self.pools: Dict[str, Array] = {"k": jnp.zeros(shape, dt),
                                         "v": jnp.zeros(shape, dt)}
@@ -114,6 +119,11 @@ class PagedKVCache:
         self._entries: Dict[int, Tuple[Optional[int], bytes]] = {}
         self._ref: List[int] = [0] * num_blocks
         self._tables: Dict[int, List[int]] = {}
+        # encdec cross-attention KV: written once at admission (encoder
+        # pass), read-only for the sequence's whole life, never hashed
+        # into the prefix index or COWed. Kept in a separate namespace so
+        # self-attention growth/truncation never touches these rows.
+        self._cross_tables: Dict[int, List[int]] = {}
         self.peak_blocks_in_use = 0
         self.evictions = 0
         self.cow_copies = 0
@@ -175,6 +185,9 @@ class PagedKVCache:
         for table in self._tables.values():
             for pid in table:
                 counts[pid] += 1
+        for table in self._cross_tables.values():
+            for pid in table:
+                counts[pid] += 1
         assert self._ref == counts, (self._ref, counts)
         assert all(r >= 0 for r in self._ref)
         for pid in self._evictable:
@@ -184,6 +197,11 @@ class PagedKVCache:
         resident = set(self._free) | set(self._evictable)
         for table in self._tables.values():
             assert resident.isdisjoint(table)
+        for table in self._cross_tables.values():
+            assert resident.isdisjoint(table)
+            # cross pages are never registered/shared: refcount exactly 1
+            for pid in table:
+                assert self._ref[pid] == 1 and pid not in self._registered
         for h, pid in self._index.items():
             assert self._registered.get(pid) == h
             assert pid in self._entries
@@ -393,6 +411,53 @@ class PagedKVCache:
                     self._evictable[pid] = h      # MRU end
                 else:
                     self._free.append(pid)
+        # cross pages are private and unregistered: straight to free.
+        for pid in self._cross_tables.pop(seq_id, []):
+            self._ref[pid] -= 1
+            assert self._ref[pid] == 0, f"shared cross page {pid}"
+            self._free.append(pid)
+
+    # -- encdec cross-attention pages -----------------------------------------
+
+    def alloc_cross(self, seq_id: int, n_tokens: int) -> Optional[List[int]]:
+        """Reserve private pages for ``n_tokens`` of encoder cross KV.
+
+        The engine writes them exactly once (the admission-time encoder
+        pass) and they stay read-only until :meth:`release`. Returns the
+        page ids, or None (no state change) if the pool cannot cover
+        them — the scheduler treats that like any other admission
+        failure.
+        """
+        if seq_id in self._cross_tables:
+            raise ValueError(f"seq {seq_id} already has cross pages")
+        need = self.blocks_for_tokens(n_tokens)
+        if need > self.free_capacity():
+            return None
+        pages = [self._acquire() for _ in range(need)]
+        self._cross_tables[seq_id] = pages
+        self.peak_blocks_in_use = max(self.peak_blocks_in_use,
+                                      self.blocks_in_use)
+        return pages
+
+    def has_cross(self, seq_id: int) -> bool:
+        return seq_id in self._cross_tables
+
+    def cross_row(self, seq_id: int, width: Optional[int] = None
+                  ) -> np.ndarray:
+        """(width,) int32 cross-page table, null-page padded."""
+        blocks = self._cross_tables[seq_id]
+        row = np.zeros((width or len(blocks),), np.int32)
+        row[:len(blocks)] = blocks
+        return row
+
+    def batch_cross(self, seq_ids: Sequence[Optional[int]],
+                    width: int) -> np.ndarray:
+        """(len(seq_ids), width) int32; None/crossless rows -> null."""
+        out = np.zeros((len(seq_ids), width), np.int32)
+        for i, sid in enumerate(seq_ids):
+            if sid is not None and sid in self._cross_tables:
+                out[i] = self.cross_row(sid, width)
+        return out
 
     def table_row(self, seq_id: int) -> np.ndarray:
         """(max_blocks_per_seq,) int32 page table, null-page padded."""

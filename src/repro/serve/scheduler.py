@@ -56,6 +56,19 @@ class Sequence:                        # tracked in running/waiting by object
     spec_k: Optional[int] = None
     spec_ema: float = 1.0
     spec_cool: int = 0
+    # encdec only: raw encoder input, run once per admission (frames are
+    # not replayable from tokens, so preemption re-encodes).
+    frames: Optional[np.ndarray] = dataclasses.field(default=None,
+                                                     repr=False)
+    # recurrent-slot lifecycle: the engine initializes the sequence's
+    # device slot (zero-fill or checkpoint restore) before the first
+    # prefill chunk of each admission; `_restore` holds the host-side
+    # checkpoint tree the scheduler matched, if any.
+    state_ready: bool = False
+    # encdec: encoder tokens actually valid in the cross pages (ragged
+    # inputs shorter than cross_len mask the tail).
+    cross_valid: int = 0
+    _restore: Optional[object] = dataclasses.field(default=None, repr=False)
     _replay: Optional[np.ndarray] = dataclasses.field(default=None,
                                                       repr=False)
 
@@ -100,11 +113,25 @@ class Scheduler:
     """Pairs the waiting queue with the shared-page pool."""
 
     def __init__(self, cache: PagedKVCache, *, max_running: int,
-                 prefill_chunk: int, watermark: int = 1):
+                 prefill_chunk: int, watermark: int = 1,
+                 spec=None, slots=None, ckpts=None):
         self.cache = cache
         self.max_running = max_running
         self.prefill_chunk = prefill_chunk
         self.watermark = watermark
+        # Sequence-state shape of the family being served (None keeps
+        # the historical pages-only behavior for direct construction):
+        # `spec` is its models.state.SequenceStateSpec, `slots` the
+        # StateSlotPool for recurrent families, `ckpts` the
+        # StateCheckpointCache standing in for page-sharing when prefix
+        # caching is on for a slot family.
+        self.state_spec = spec
+        self.slots = slots
+        self.ckpts = ckpts
+        self._uses_pages = spec is None or spec.has_pages
+        self._cross_blocks = (cache.blocks_for_tokens(spec.cross_tokens)
+                              if spec is not None and spec.cross_tokens
+                              else 0)
         self.waiting: Deque[Sequence] = deque()
         self.running: List[Sequence] = []
         self._next_id = 0
@@ -119,8 +146,11 @@ class Scheduler:
         """Raise if this request's footprint can never be allocated,
         even with the whole pool (and every cached page) evicted."""
         footprint = len(prompt) + max(max_new_tokens - 1, 0)
-        need = self.cache.blocks_for_tokens(footprint)
-        limit = min(self.cache.max_blocks_per_seq,
+        need = (self.cache.blocks_for_tokens(footprint)
+                if self._uses_pages else 0) + self._cross_blocks
+        # cross pages are a fixed overhead on top of the max_seq_len
+        # token budget, so they widen the per-seq limit symmetrically.
+        limit = min(self.cache.max_blocks_per_seq + self._cross_blocks,
                     self.cache.num_blocks - 1)
         if need > limit:
             raise ValueError(
@@ -128,7 +158,8 @@ class Scheduler:
                 f"(per-seq/pool limit {limit})")
 
     def submit(self, prompt: np.ndarray, max_new_tokens: int,
-               sampler: Optional[object] = None) -> Sequence:
+               sampler: Optional[object] = None,
+               frames: Optional[np.ndarray] = None) -> Sequence:
         """Queue a request, failing fast if it can never fit. This is
         the single validation site; ``PagedEngine.generate`` wraps the
         error with the request index and unwinds its earlier
@@ -140,7 +171,7 @@ class Scheduler:
             from repro.serve.sampling import Sampler
             sampler = Sampler(vocab_size=self.cache.cfg.vocab_size)
         seq = Sequence(self._next_id, np.asarray(prompt, np.int32),
-                       max_new_tokens, sampler=sampler)
+                       max_new_tokens, sampler=sampler, frames=frames)
         self._next_id += 1
         self.waiting.append(seq)
         return seq
@@ -167,12 +198,36 @@ class Scheduler:
         n = 0
         while self.waiting and len(self.running) < self.max_running:
             seq = self.waiting[0]
-            if self.cache.prefix_cache and seq.prefix_keys is None:
+            if self.slots is not None and self.slots.free_slots == 0:
+                break          # slot pool full — a finish will free one
+            want_keys = ((self._uses_pages and self.cache.prefix_cache)
+                         or self.ckpts is not None)
+            if want_keys and seq.prefix_keys is None:
                 seq.prefix_keys = self.cache.prefix_keys(seq.prompt)
-            pages, matched = self.cache.lookup_prefix(seq.prompt,
-                                                      seq.prefix_keys)
-            need_new = max(0, self.cache.blocks_for_tokens(seq.replay_len)
-                           - len(pages))
+            if self._uses_pages:
+                pages, matched = self.cache.lookup_prefix(seq.prompt,
+                                                          seq.prefix_keys)
+            else:
+                pages, matched = [], 0
+            restore = None
+            if self.slots is not None:
+                # A slot family resumes only where a *state checkpoint*
+                # exists: pages alone can't rebuild the recurrent state
+                # at the matched boundary. Hybrid additionally caps the
+                # restore at the page match (both pools must cover it)
+                # and drops the unusable page tail.
+                if self.ckpts is not None:
+                    limit = (matched if self._uses_pages
+                             else seq.prompt_len - 1)
+                    matched, restore = self.ckpts.lookup(seq.prefix_keys,
+                                                         limit)
+                else:
+                    matched = 0
+                if self._uses_pages:
+                    pages = pages[:matched // self.cache.block_size]
+            need_new = self._cross_blocks + (
+                max(0, self.cache.blocks_for_tokens(seq.replay_len)
+                    - len(pages)) if self._uses_pages else 0)
             avail = (self.cache.free_blocks + self.cache.cached_blocks
                      - sum(1 for p in pages if self.cache.is_cached(p)))
             if self.running and need_new + self.watermark > avail:
@@ -184,7 +239,15 @@ class Scheduler:
             self.cache.attach(seq.seq_id, pages,
                               query_tokens=seq.prompt_len if first else 0,
                               hit_tokens=matched if first else 0)
+            if self._cross_blocks and self.cache.alloc_cross(
+                    seq.seq_id, self.state_spec.cross_tokens) is None:
+                self.cache.release(seq.seq_id)
+                break
+            if self.slots is not None:
+                self.slots.acquire(seq.seq_id)
             seq.prefilled = matched
+            seq.state_ready = False
+            seq._restore = restore
             self.running.append(self.waiting.popleft())
             self.admitted += 1
             n += 1
@@ -201,6 +264,8 @@ class Scheduler:
 
         Returns the COW (src, dst) page copies the engine must replay on
         device before the model step writes."""
+        if not self._uses_pages:
+            return []          # slot state is fixed-size: growth is free
         while True:
             copies = self.cache.append_tokens(seq.seq_id, start, end)
             if copies is not None:
@@ -216,7 +281,11 @@ class Scheduler:
         sequence to the *front* of the waiting queue, outputs intact."""
         self.running.remove(seq)
         self.cache.release(seq.seq_id)
+        if self.slots is not None:
+            self.slots.release(seq.seq_id)
         seq.prefilled = 0
+        seq.state_ready = False
+        seq._restore = None
         seq.restarts += 1
         self.waiting.appendleft(seq)
         self.preemptions += 1
@@ -327,6 +396,8 @@ class Scheduler:
         next admit() — and registered prompt pages stay hot."""
         self.running.remove(seq)
         self.cache.release(seq.seq_id)
+        if self.slots is not None:
+            self.slots.release(seq.seq_id)
         self.finished += 1
 
     def cancel(self, seq: Sequence) -> bool:
@@ -339,6 +410,8 @@ class Scheduler:
             seq.finish_reason = "cancelled"
             self.running.remove(seq)
             self.cache.release(seq.seq_id)
+            if self.slots is not None:
+                self.slots.release(seq.seq_id)
             self.cancelled += 1
             return True
         try:

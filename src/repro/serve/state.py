@@ -1,0 +1,207 @@
+"""Per-sequence recurrent state slots + block-boundary checkpoints.
+
+The paged KV cache (serve/kv_cache.py) solves serving memory for
+*attention* layers: per-token KV grows, so it is paged, ref-counted and
+prefix-shared. Recurrent layers (rwkv6 wkv state + token-shift rows,
+RG-LRU hidden + conv state) have the opposite shape: their state is
+**fixed-size per sequence** regardless of length. Paging buys nothing
+there — what a sequence needs is one *slot* in a preallocated pool.
+
+:class:`StateSlotPool` is that pool: one device allocation per state
+leaf of ``(num_slots,) + slot_shape``, with slot 0 reserved as the
+**null slot** (the slot analogue of the null page: padded decode lanes
+gather and scatter it, its contents are garbage, and no read path ever
+treats it as signal). The host side is a trivial free list — slots are
+never shared, never COWed, never grown.
+
+Because a slot is overwritten in place by every prefill chunk and
+decode step, prefix caching cannot share it the way pages are shared.
+Instead :class:`StateCheckpointCache` keeps **block-boundary state
+checkpoints**: at every block-aligned prefill boundary inside the
+prompt, the engine snapshots the sequence's slot to host memory and
+registers it under the same chain-hash prefix keys the page cache uses
+(``PagedKVCache.prefix_keys``). A later prompt walking the same chain
+restores the deepest checkpointed boundary into a fresh slot and
+prefills only the tail — the recurrent-family equivalent of attaching
+cached pages. Every hit is verified against the stored
+``(parent hash, block token bytes)`` pair, so a 64-bit collision
+degrades to a cache miss, never to foreign state (the same hardening
+``PagedKVCache`` applies to page hits).
+
+Hybrid models (rglru) hold both pools: their attention blocks keep
+paged KV while their recurrent blocks keep a slot, and a prefix hit
+must satisfy **both** — the scheduler resumes at the deepest
+checkpointed boundary that the page match also covers.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+class StateSlotPool:
+    """Fixed pool of per-sequence recurrent-state slots.
+
+    ``slots`` is the device tree (one leaf per state leaf, slot-major);
+    ownership is a host-side free list. Slot 0 is the null slot.
+    """
+
+    def __init__(self, spec, *, num_slots: int):
+        if num_slots < 2:
+            raise ValueError("need >= 2 slots (slot 0 is the null slot)")
+        if not spec.has_slots:
+            raise ValueError(
+                f"family {spec.family!r} declares no slot state")
+        self.spec = spec
+        self.num_slots = num_slots
+        self.slots = jax.tree.map(
+            lambda l: jnp.zeros((num_slots,) + tuple(l.shape), l.dtype),
+            spec.slot_shapes)
+        # LIFO free list; slot 0 reserved as the null slot.
+        self._free: List[int] = list(range(num_slots - 1, 0, -1))
+        self._owner: Dict[int, int] = {}       # seq_id -> slot id
+        self.peak_slots_in_use = 0
+
+    def shard(self, rules) -> None:
+        """Lay the slot tree out per the active sharding rules: the
+        slot dim replicates ("state_slots"); inner dims follow the
+        family's ``slot_axes``."""
+        axes = jax.tree.map(lambda ax: ("state_slots",) + tuple(ax),
+                            self.spec.slot_axes,
+                            is_leaf=lambda x: isinstance(x, tuple))
+        self.slots = jax.tree.map(
+            lambda s, ax: jax.device_put(
+                s, rules.sharding(ax, s.shape)),
+            self.slots, axes,
+            is_leaf=lambda x: isinstance(x, jax.Array))
+
+    # -- accounting -----------------------------------------------------------
+
+    @property
+    def free_slots(self) -> int:
+        return len(self._free)
+
+    @property
+    def slots_in_use(self) -> int:
+        return len(self._owner)
+
+    @property
+    def bytes_per_slot(self) -> int:
+        return self.spec.slot_bytes()
+
+    def reset_stats(self) -> None:
+        self.peak_slots_in_use = self.slots_in_use
+
+    def check_slots(self) -> None:
+        """Invariant sweep (tests): owned and free slots partition
+        [1, num_slots); slot 0 is never owned or free-listed."""
+        owned = set(self._owner.values())
+        free = set(self._free)
+        assert not owned & free, (owned, free)
+        assert owned | free == set(range(1, self.num_slots))
+        assert 0 not in owned and 0 not in free
+
+    # -- ownership ------------------------------------------------------------
+
+    def acquire(self, seq_id: int) -> Optional[int]:
+        """Claim a slot for ``seq_id`` (None if the pool is exhausted).
+        The slot's device contents are stale garbage from its previous
+        owner — the engine zero-fills or checkpoint-restores it before
+        the first step that reads it."""
+        if seq_id in self._owner:
+            raise ValueError(f"seq {seq_id} already owns a slot")
+        if not self._free:
+            return None
+        slot = self._free.pop()
+        self._owner[seq_id] = slot
+        self.peak_slots_in_use = max(self.peak_slots_in_use,
+                                     self.slots_in_use)
+        return slot
+
+    def release(self, seq_id: int) -> None:
+        self._free.append(self._owner.pop(seq_id))
+
+    def slot_of(self, seq_id: int) -> int:
+        return self._owner[seq_id]
+
+    def batch_slots(self, seq_ids: Sequence[Optional[int]]) -> np.ndarray:
+        """(len(seq_ids),) int32 slot ids; None rows -> the null slot."""
+        return np.array([0 if sid is None else self._owner[sid]
+                         for sid in seq_ids], np.int32)
+
+
+class StateCheckpointCache:
+    """Host-side block-boundary recurrent-state checkpoints.
+
+    Entries are keyed by the page cache's chain-hash prefix keys: level
+    ``i`` covers prompt tokens ``[0, (i+1) * block_size)`` and stores
+    ``(parent hash, block token bytes, host state tree)``. Lookup walks
+    the chain verifying each level's ``(parent, bytes)`` pair and
+    returns the deepest boundary not past ``limit``; registration keeps
+    the first tree seen for a level (identical prompts produce
+    identical state in exact mode). LRU-bounded at ``max_entries``.
+    """
+
+    def __init__(self, *, block_size: int, max_entries: int = 256):
+        self.block_size = block_size
+        self.max_entries = max_entries
+        # chain hash -> (parent hash, block bytes, host state tree)
+        self._entries: "OrderedDict[int, Tuple[Optional[int], bytes, object]]" = OrderedDict()
+        self.hits = 0
+        self.queries = 0
+        self.hit_tokens = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def register(self, keys: List[Tuple[int, bytes]], boundary_tokens: int,
+                 host_tree) -> None:
+        """Index the state *after* ``boundary_tokens`` prompt tokens
+        (must be block-aligned; the key list is the prompt's
+        ``prefix_keys``)."""
+        bs = self.block_size
+        if boundary_tokens <= 0 or boundary_tokens % bs:
+            raise ValueError(
+                f"checkpoint boundary {boundary_tokens} is not "
+                f"block-aligned (block_size {bs})")
+        level = boundary_tokens // bs - 1
+        h, seg = keys[level]
+        if h in self._entries:
+            self._entries.move_to_end(h)
+            return
+        parent = keys[level - 1][0] if level > 0 else None
+        self._entries[h] = (parent, seg, host_tree)
+        while len(self._entries) > self.max_entries:
+            self._entries.popitem(last=False)
+
+    def lookup(self, keys: List[Tuple[int, bytes]],
+               limit: int) -> Tuple[int, Optional[object]]:
+        """Deepest verified checkpointed boundary ``<= limit``:
+        (boundary tokens, host state tree) or (0, None)."""
+        self.queries += 1
+        best: Tuple[int, Optional[object]] = (0, None)
+        prev: Optional[int] = None
+        for i, (h, seg) in enumerate(keys):
+            boundary = (i + 1) * self.block_size
+            if boundary > limit:
+                break
+            e = self._entries.get(h)
+            if e is None or e[0] != prev or e[1] != seg:
+                break
+            self._entries.move_to_end(h)
+            best = (boundary, e[2])
+            prev = h
+        if best[0]:
+            self.hits += 1
+            self.hit_tokens += best[0]
+        return best
+
+    def stats(self) -> Dict[str, int]:
+        return {"entries": len(self._entries), "hits": self.hits,
+                "queries": self.queries, "hit_tokens": self.hit_tokens}

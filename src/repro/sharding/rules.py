@@ -49,6 +49,10 @@ DEFAULT_RULES = {
     # serve-time paged KV pool: pages replicate (any device can host any
     # sequence's pages); the kv_heads dim of each page shards over model.
     "pages": (),
+    # serve-time recurrent state slots (ssm wkv/shift, hybrid RG-LRU
+    # hidden + conv): the slot dim replicates like pages; inner dims
+    # shard per the family's slot_axes.
+    "state_slots": (),
 }
 
 
@@ -103,6 +107,7 @@ FSDP_RULES = {
     "seq": (), "embed": (), "heads": (), "kv_heads": (), "head_dim": (),
     "ff": (), "vocab": (), "experts": ("data",), "expert_ff": (),
     "layers": (), "conv": (), "stats": (), "pages": (),
+    "state_slots": (),
 }
 
 

@@ -239,6 +239,35 @@ def test_rpr006_self_attribute_donation():
     assert rules_of(src, "src/repro/serve/x.py") == ["RPR006"]
 
 
+# -- RPR007: serve/ is family-agnostic -----------------------------------------
+
+
+def test_rule_007_family_imports_in_serve():
+    src = """
+    import repro.models.transformer
+    import repro.models.rwkv6 as ssm
+    from repro.models.moe import prefill_paged
+    from repro.models import whisper
+    from repro.models import rglru, api
+    """
+    assert rules_of(src, "src/repro/serve/engine.py") == ["RPR007"] * 5
+
+
+def test_rule_007_sanctioned_surface_and_scope():
+    src = """
+    from repro.models import api
+    from repro.models.api import prefill_paged
+    from repro.models.state import SequenceStateSpec
+    import repro.models.layers as L
+    """
+    # the dispatch/shared modules are the sanctioned serve/ surface
+    assert rules_of(src, "src/repro/serve/engine.py") == []
+    # family modules are fine everywhere else (models/, tests, launch)
+    src = "from repro.models import transformer\n"
+    assert rules_of(src, "src/repro/models/api.py") == []
+    assert rules_of(src, "src/repro/launch/serve.py") == []
+
+
 # -- suppression / driver ------------------------------------------------------
 
 

@@ -1,0 +1,322 @@
+"""Multi-architecture paged serving: every family through the ONE
+scheduler/engine queue, bit-for-bit against its dense-cache oracle in
+exact mode (cold, warm-prefix, preemption, eos), plus the capability
+hard errors the SequenceStateSpec flags gate.
+
+Alignment constraints baked into the parameters below (see
+docs/ARCHITECTURE.md "Paged sequence state"):
+
+* hybrid (RG-LRU) uses ``lax.associative_scan`` whose float reduction
+  tree depends on chunk length, so the cold parity run prefills the
+  whole prompt in ONE chunk (``plen == prefill_chunk``) to match the
+  oracle, and the preemption run uses ``prefill_chunk == 1`` so every
+  segmentation degenerates to the same sequential recurrence.
+* ssm (rwkv6 smoke, ``rwkv_chunk == 0``) scans sequentially, so it is
+  chunk-invariant and multi-chunk traces compare exactly.
+* moe's dense oracle must be drop-free (``capacity_factor`` generous);
+  the paged ``_serve_ffn`` path pins capacity to the token count.
+* the dense ``Engine`` shares positions across lanes for recurrent
+  families, so oracle batches use equal-length prompts.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.models import api
+from repro.serve.engine import Engine, PagedEngine, Request
+from repro.serve.loop import AsyncEngine
+from repro.serve.sampling import Sampler
+from repro.serve.spec import NGramDrafter, SpecConfig
+
+FAMILY_CFGS = {
+    "moe": ("mixtral_8x7b", dict(capacity_factor=64.0)),
+    "ssm": ("rwkv6_7b", {}),
+    # smoke() leaves n_blocks == 0; 4 layers / 1 tail / ("rec","rec",
+    # "attn") gives one full rec-rec-attn block plus the dense tail.
+    "hybrid": ("recurrentgemma_9b", dict(n_layers=4, n_tail_layers=1)),
+    "encdec": ("whisper_small", {}),
+}
+
+
+def _exact(cfg):
+    return dataclasses.replace(cfg, softmax_mode="exact",
+                               norm_mode="exact", logit_int8=False)
+
+
+@pytest.fixture(scope="module")
+def fams():
+    out = {}
+    for fam, (name, over) in FAMILY_CFGS.items():
+        cfg = _exact(get_config(name).smoke())
+        if over:
+            cfg = dataclasses.replace(cfg, **over)
+        params, _ = api.init_params(jax.random.PRNGKey(0), cfg)
+        out[fam] = (cfg, params)
+    return out
+
+
+def _requests(cfg, n, rng, plen=8, new=6, **kw):
+    return [Request(prompt=rng.integers(0, cfg.vocab_size, size=plen)
+                    .astype(np.int32), max_new_tokens=new, **kw)
+            for _ in range(n)]
+
+
+def _paged(cfg, params, **kw):
+    kw.setdefault("num_blocks", 24)
+    kw.setdefault("block_size", 4)
+    kw.setdefault("max_seq_len", 32)
+    kw.setdefault("max_running", 2)
+    kw.setdefault("decode_batch", 2)
+    kw.setdefault("prefill_chunk", 8)
+    kw.setdefault("decode_horizon", 4)
+    kw.setdefault("backend", "reference")
+    return PagedEngine(cfg, params, **kw)
+
+
+def _assert_drained(eng):
+    """Zero leaked pages AND slots after every trace."""
+    st = eng.stats()
+    assert st["blocks_in_use"] == 0
+    eng.cache.check_refcounts()
+    if eng.slot_pool is not None:
+        assert st["state_slots_in_use"] == 0
+        assert st["free_state_slots"] == eng.slot_pool.num_slots - 1
+        eng.slot_pool.check_slots()
+    assert st["state_footprint_bytes"] == 0
+
+
+# -- cold parity vs the dense-cache oracle ------------------------------------
+
+
+@pytest.mark.parametrize("fam", ["moe", "ssm", "hybrid"])
+def test_cold_paged_matches_dense_oracle(fams, fam):
+    """One PagedEngine queue per family reproduces the dense Engine's
+    greedy continuations token-for-token in exact mode."""
+    cfg, params = fams[fam]
+    reqs = _requests(cfg, 4, np.random.default_rng(7))
+    dense = Engine(cfg, params, batch_size=4, max_len=32).generate(reqs)
+    eng = _paged(cfg, params)
+    paged = eng.generate(reqs)
+    assert paged == dense
+    _assert_drained(eng)
+
+
+def test_encdec_cold_paged_matches_dense_oracle(fams):
+    """Whisper: encoder runs once at admission, cross KV parks in
+    read-only shared pages, decoder self-attention uses the normal
+    paged path — against a hand-rolled dense-cache greedy loop (the
+    dense prefill emits logits for the final position only)."""
+    cfg, params = fams["encdec"]
+    m = api.get_model(cfg)
+    rng = np.random.default_rng(11)
+    plen, new, n_frames = 4, 6, 8
+    reqs = []
+    want = []
+    for _ in range(3):
+        prompt = rng.integers(0, cfg.vocab_size, size=plen).astype(np.int32)
+        frames = rng.standard_normal((n_frames, cfg.d_model)) \
+            .astype(np.float32) * 0.1
+        reqs.append(Request(prompt=prompt, max_new_tokens=new,
+                            frames=frames))
+        logits, cache = m.prefill(
+            params, {"frames": jnp.asarray(frames)[None],
+                     "tokens": jnp.asarray(prompt)[None]},
+            cfg, plen + new)
+        s = Sampler(vocab_size=cfg.vocab_size)
+        tok = s(np.asarray(logits)[0, -1])
+        out = [tok]
+        for i in range(1, new):
+            logits, cache = m.decode_step(
+                params, cache, jnp.asarray([tok], jnp.int32),
+                jnp.asarray(plen + i - 1, jnp.int32), cfg)
+            tok = s(np.asarray(logits)[0])
+            out.append(tok)
+        want.append(out)
+    eng = _paged(cfg, params, prefill_chunk=4)
+    assert eng.generate(reqs) == want
+    _assert_drained(eng)
+
+
+# -- warm prefix: checkpointed state restored at the matched boundary ---------
+
+
+def test_ssm_warm_prefix_restores_checkpointed_state(fams):
+    """A second admission of a seen prompt restores the block-boundary
+    recurrent state instead of re-prefilling from scratch, and still
+    lands on identical tokens (sequential scan => chunk-invariant)."""
+    cfg, params = fams["ssm"]
+    reqs = _requests(cfg, 2, np.random.default_rng(3), plen=12,
+                     new=6)
+    eng = _paged(cfg, params, prefill_chunk=4)
+    cold = eng.generate(reqs)
+    st = eng.stats()
+    assert st["state_checkpoints"] > 0           # registered on the way
+    warm = eng.generate(reqs)
+    assert warm == cold
+    st = eng.stats()
+    # prompt_len 12, block 4: boundaries 4 and 8 are checkpointable
+    # (the last block is never cached), so each warm admission skips 8.
+    assert st["checkpoint_hit_tokens"] >= 8
+    _assert_drained(eng)
+
+
+def test_hybrid_warm_prefix_joint_page_and_slot_resume(fams):
+    """Hybrid resumes BOTH pools coherently: pages attach up to the
+    checkpointed boundary and the RG-LRU/conv state restores there.
+    ``prefill_chunk == block_size`` keeps chunk segmentation identical
+    across cold and warm runs (prefill restarts at a block multiple)."""
+    cfg, params = fams["hybrid"]
+    reqs = _requests(cfg, 2, np.random.default_rng(5), plen=12, new=6)
+    eng = _paged(cfg, params, prefill_chunk=4)
+    cold = eng.generate(reqs)
+    warm = eng.generate(reqs)
+    assert warm == cold
+    st = eng.stats()
+    assert st["checkpoint_hit_tokens"] >= 8
+    assert st["prefix_hit_tokens"] >= 8          # pages reused too
+    _assert_drained(eng)
+
+
+# -- preemption: recompute keeps semantics for every state shape --------------
+
+
+def test_hybrid_preempt_resume_token_parity(fams):
+    """Tight pool + watermark 0 forces recompute-preemption; replay
+    (prompt + generated) lands on identical tokens. ``prefill_chunk ==
+    1`` makes every RG-LRU segmentation sequentially identical."""
+    cfg, params = fams["hybrid"]
+    reqs = _requests(cfg, 4, np.random.default_rng(9), plen=8, new=6)
+    roomy = _paged(cfg, params, prefill_chunk=1,
+                   prefix_cache=False).generate(reqs)
+    tight = _paged(cfg, params, prefill_chunk=1, prefix_cache=False,
+                   num_blocks=5, watermark=0)
+    assert tight.generate(reqs) == roomy
+    assert tight.stats()["preemptions"] > 0
+    _assert_drained(tight)
+
+
+def test_encdec_preempt_reencodes_and_matches(fams):
+    """Preempting a whisper sequence drops its cross pages; resumption
+    re-runs the encoder (deterministic) and replays the decoder, so
+    outputs match the roomy run exactly."""
+    cfg, params = fams["encdec"]
+    rng = np.random.default_rng(13)
+    reqs = []
+    for _ in range(4):
+        reqs.append(Request(
+            prompt=rng.integers(0, cfg.vocab_size, size=4)
+            .astype(np.int32), max_new_tokens=6,
+            frames=rng.standard_normal((8, cfg.d_model))
+            .astype(np.float32) * 0.1))
+    roomy = _paged(cfg, params, prefill_chunk=4,
+                   num_blocks=48).generate(reqs)
+    # per seq: 8 cross blocks (cross_len 32 / block 4) + <=3 self blocks.
+    # 20 blocks admit two (9 each at admission) but starve decode growth.
+    tight = _paged(cfg, params, prefill_chunk=4, num_blocks=20,
+                   watermark=0)
+    assert tight.generate(reqs) == roomy
+    assert tight.stats()["preemptions"] > 0
+    _assert_drained(tight)
+
+
+# -- AsyncEngine: the open loop serves every family too -----------------------
+
+
+@pytest.mark.parametrize("fam", ["moe", "ssm", "hybrid", "encdec"])
+def test_async_loop_serves_every_family(fams, fam):
+    """Staggered open-loop arrivals through AsyncEngine land on the
+    same tokens as the closed generate() call for every family (prompts
+    fit in one prefill chunk, so admission timing cannot change the
+    recurrent-scan segmentation)."""
+    cfg, params = fams[fam]
+    if fam == "encdec":
+        rng = np.random.default_rng(19)
+        reqs = [Request(prompt=rng.integers(0, cfg.vocab_size, size=4)
+                        .astype(np.int32), max_new_tokens=4,
+                        frames=rng.standard_normal((8, cfg.d_model))
+                        .astype(np.float32) * 0.1)
+                for _ in range(3)]
+    else:
+        reqs = _requests(cfg, 3, np.random.default_rng(19), plen=8, new=4)
+    closed = _paged(cfg, params).generate(reqs)
+    eng = _paged(cfg, params)
+    loop = AsyncEngine(eng)
+    handles = [loop.add_request(r, arrival=2 * i)
+               for i, r in enumerate(reqs)]
+    loop.run()
+    assert [h.tokens for h in handles] == closed
+    _assert_drained(eng)
+
+
+# -- eos finish events ride through the recurrent path ------------------------
+
+
+def test_ssm_eos_truncates_like_dense(fams):
+    """eos on a recurrent family: the eos-free continuation cut at the
+    first eos occurrence (kept), exactly as the dense path defines."""
+    cfg, params = fams["ssm"]
+    req = _requests(cfg, 1, np.random.default_rng(17), plen=8, new=8)[0]
+    base = _paged(cfg, params).generate([req])[0]
+    eos = int(base[3])
+    want = base[:next(i for i, t in enumerate(base) if t == eos) + 1]
+    eng = _paged(cfg, params)
+    got = eng.generate([dataclasses.replace(req, eos_ids=(eos,))])[0]
+    assert got == want
+    assert eng.stats()["finish_reasons"] == {"eos": 1}
+    _assert_drained(eng)
+
+
+# -- O(1) recurrent state: footprint is per-slot, not per-token ---------------
+
+
+def test_recurrent_state_is_o1_per_sequence(fams):
+    """A recurrent sequence's state footprint is a fixed-size slot:
+    byte-identical across prompt lengths, never a function of tokens."""
+    cfg, params = fams["ssm"]
+    per_slot = []
+    for plen in (8, 24):
+        eng = _paged(cfg, params, prefill_chunk=8)
+        eng.generate(_requests(cfg, 2, np.random.default_rng(1),
+                               plen=plen, new=4))
+        st = eng.stats()
+        assert st["peak_state_slots_in_use"] <= 2    # == max_running
+        assert st["blocks_in_use"] == 0 and st["peak_blocks_in_use"] == 0
+        per_slot.append(st["state_bytes_per_slot"])
+        _assert_drained(eng)
+    assert per_slot[0] == per_slot[1] > 0
+
+
+# -- capability flags: hard errors, never silent wrong answers ----------------
+
+
+def test_vlm_is_not_paged_servable():
+    cfg = _exact(get_config("qwen2_vl_7b").smoke())
+    params, _ = api.init_params(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(ValueError, match="not paged-servable"):
+        _paged(cfg, params)
+
+
+def test_spec_decode_rejected_without_capability(fams):
+    cfg, params = fams["ssm"]
+    with pytest.raises(ValueError,
+                       match="does not support speculative decoding"):
+        _paged(cfg, params,
+               spec_config=SpecConfig(NGramDrafter(), max_k=4))
+
+
+def test_prefix_cache_rejected_without_capability(fams):
+    cfg, params = fams["encdec"]
+    with pytest.raises(ValueError,
+                       match="does not support prefix caching"):
+        _paged(cfg, params, prefix_cache=True)
+
+
+def test_encdec_requires_frames(fams):
+    cfg, params = fams["encdec"]
+    eng = _paged(cfg, params)
+    with pytest.raises(ValueError, match="frames"):
+        eng.generate(_requests(cfg, 1, np.random.default_rng(2)))

@@ -271,13 +271,14 @@ def test_paged_decode_inputs_spec(small_lm):
     from repro.configs.base import ShapeConfig
     cfg, _ = small_lm
     shape = ShapeConfig("t", seq_len=64, global_batch=4, kind="decode")
-    pools, axes, token, pos, tables = api.paged_decode_inputs(
+    state, axes, token, pos, refs = api.paged_decode_inputs(
         cfg, shape, block_size=16)
-    assert pools["k"].shape == (cfg.n_layers, 4 * 4 + 1, 16,
+    assert state["k"].shape == (cfg.n_layers, 4 * 4 + 1, 16,
                                 cfg.n_kv_heads, cfg.head_dim)
     assert axes["k"][1] == "pages"
     assert token.shape == (4,) and pos.shape == (4,)
-    assert tables.shape == (4, 4)
+    assert refs["tables"].shape == (4, 4)
+    assert "slots" not in state       # dense carries no recurrent slots
 
 
 def test_paged_cache_accounting(small_lm):
